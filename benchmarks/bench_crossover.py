@@ -1,0 +1,37 @@
+"""§3 time-complexity claims: primal cost tracks n, dual cost tracks p; the
+2p > n dispatch rule picks the faster side. Sweeps the aspect ratio at fixed
+n*p and times both modes + the auto choice."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.core import sven, SvenConfig
+from repro.core.elastic_net import lambda1_max
+from repro.baselines import elastic_net_cd
+from repro.data.synthetic import make_regression
+
+BUDGET = 600_000  # n * p
+
+
+def run():
+    for n in (100, 300, 800, 2000, 6000):
+        p = BUDGET // n
+        X, y, _ = make_regression(n, p, k_true=min(20, p // 4), rho=0.3, seed=1)
+        l1 = 0.3 * float(lambda1_max(X, y))
+        beta = elastic_net_cd(X, y, l1, 1.0).beta
+        t = float(jnp.sum(jnp.abs(beta)))
+        if t <= 0:
+            continue
+        tp = time_call(lambda: sven(X, y, t, 1.0, SvenConfig(mode="primal")), reps=1)
+        td = time_call(lambda: sven(X, y, t, 1.0, SvenConfig(mode="dual")), reps=1)
+        auto_mode = "primal" if 2 * p > n else "dual"
+        t_auto = tp if auto_mode == "primal" else td
+        correct = (tp <= td) == (auto_mode == "primal") or abs(tp - td) / max(tp, td) < 0.3
+        emit(f"crossover_n{n}_p{p}", t_auto,
+             f"primal={tp * 1e3:.1f}ms dual={td * 1e3:.1f}ms auto={auto_mode} "
+             f"dispatch_near_optimal={correct}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Framework-side micro-bench: reduced-config train/decode step wall time for
+three representative architectures (dense / moe / ssm) on CPU — a smoke-level
+throughput tracker for the LM substrate (the real perf story is the dry-run
+roofline in EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.configs import get_config
+from repro.models import model as M
+from repro.optim import adamw_init
+from repro.serve.engine import make_decode_step, make_prefill_step
+from repro.train.step import make_train_step
+
+
+def run():
+    for arch in ("internlm2-1.8b", "mixtral-8x7b", "mamba2-130m"):
+        cfg = get_config(arch, smoke=True)
+        params = M.init_model(jax.random.PRNGKey(0), cfg)
+        B, S = 4, 64
+        if cfg.frontend == "codebooks":
+            batch = {"tokens": jnp.zeros((B, S, cfg.n_codebooks), jnp.int32)}
+        elif cfg.frontend == "patches":
+            batch = {"tokens": jnp.zeros((B, S - cfg.vision_tokens), jnp.int32),
+                     "patch_embeds": jnp.zeros((B, cfg.vision_tokens, cfg.d_model), cfg.dtype)}
+        else:
+            batch = {"tokens": jnp.zeros((B, S), jnp.int32)}
+        opt = adamw_init(params)
+        step = jax.jit(make_train_step(cfg, microbatches=1))
+        t_train = time_call(step, params, opt, batch, reps=2)
+        tok_s = B * S / t_train
+        emit(f"lm_train_smoke_{arch}", t_train, f"tokens_per_s={tok_s:.0f}")
+
+        pre = jax.jit(make_prefill_step(cfg, max_len=S + 8))
+        logits, caches = pre(params, batch)
+        dec = jax.jit(make_decode_step(cfg))
+        tok = jnp.zeros((B, cfg.n_codebooks), jnp.int32) if cfg.frontend == "codebooks" \
+            else jnp.zeros((B,), jnp.int32)
+        t_dec = time_call(lambda: dec(params, tok, caches), reps=2)
+        emit(f"lm_decode_smoke_{arch}", t_dec, f"tokens_per_s={B / t_dec:.0f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Figure 3: n >> p comparison. SVEN's dual time is dominated by the one-off
+kernel build, so per-setting time is ~constant in (t, lambda2) — the paper's
+'vertical line' effect. We amortize the Gram across the path (warm-started
+dual) and report per-solve times + speedups."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import NGGP_SUITE, emit, make_suite_problem, path_settings, time_call
+from repro.baselines import elastic_net_cd, elastic_net_fista, elastic_net_shotgun
+from repro.core import sven, SvenConfig
+
+LAM2 = 1.0
+POINTS = 3
+
+
+def run(points: int = POINTS):
+    cfg = SvenConfig(tol=1e-7)
+    for name, spec in NGGP_SUITE.items():
+        X, y = make_suite_problem(spec)
+        settings = path_settings(X, y, LAM2, points)
+        t_sven, t_cd, t_fista, t_sg = [], [], [], []
+        for l1, t, beta_cd in settings:
+            t_sven.append(time_call(lambda: sven(X, y, t, LAM2, cfg), reps=1))
+            t_cd.append(time_call(lambda: elastic_net_cd(X, y, l1, LAM2), reps=1))
+            t_fista.append(time_call(lambda: elastic_net_fista(X, y, l1, LAM2), reps=1))
+            t_sg.append(time_call(
+                lambda: elastic_net_shotgun(X, y, l1, LAM2, parallel=64), reps=1))
+        s, c, f, g = map(np.mean, (t_sven, t_cd, t_fista, t_sg))
+        emit(f"fig3_{name}", s,
+             f"speedup_vs_cd={c / s:.1f}x fista={f / s:.1f}x shotgun={g / s:.1f}x "
+             f"time_spread={np.std(t_sven) / max(np.mean(t_sven), 1e-12):.2f} "
+             f"n={spec['n']} p={spec['p']}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,36 @@
+"""Figure 2: p >> n training-time comparison. For each of the 8 regime-matched
+datasets and settings along the path: SVEN (primal Newton-CG) vs coordinate
+descent (glmnet stand-in), FISTA (L1_LS stand-in), Shotgun. Reports per-solve
+time + speedup of SVEN over each baseline (the paper's markers-vs-diagonal)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import PGGN_SUITE, emit, make_suite_problem, path_settings, time_call
+from repro.baselines import elastic_net_cd, elastic_net_fista, elastic_net_shotgun
+from repro.core import sven, SvenConfig
+
+LAM2 = 1.0
+POINTS = 4
+
+
+def run(points: int = POINTS):
+    cfg = SvenConfig(tol=1e-7)
+    for name, spec in PGGN_SUITE.items():
+        X, y = make_suite_problem(spec)
+        settings = path_settings(X, y, LAM2, points)
+        t_sven, t_cd, t_fista, t_sg = [], [], [], []
+        for l1, t, beta_cd in settings:
+            t_sven.append(time_call(lambda: sven(X, y, t, LAM2, cfg), reps=1))
+            t_cd.append(time_call(lambda: elastic_net_cd(X, y, l1, LAM2), reps=1))
+            t_fista.append(time_call(lambda: elastic_net_fista(X, y, l1, LAM2), reps=1))
+            t_sg.append(time_call(
+                lambda: elastic_net_shotgun(X, y, l1, LAM2, parallel=128), reps=1))
+        s, c, f, g = map(np.mean, (t_sven, t_cd, t_fista, t_sg))
+        emit(f"fig2_{name}", s,
+             f"speedup_vs_cd={c / s:.1f}x fista={f / s:.1f}x shotgun={g / s:.1f}x "
+             f"n={spec['n']} p={spec['p']} pts={len(settings)}")
+
+
+if __name__ == "__main__":
+    run()

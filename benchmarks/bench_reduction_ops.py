@@ -1,0 +1,45 @@
+"""Beyond-paper optimization accounting (DESIGN.md §9): wall-time + FLOP
+comparison of the three Gram strategies on CPU/XLA —
+  1. paper-faithful: materialize Xnew (2p, n), K = Z^T Z        (4 p^2 n MACs)
+  2. block identity (ours): G = X^T X + rank-1 assembly          (p^2 n MACs)
+  3. matrix-free operator path (no K at all; per-matvec O(np))
+and of the primal mat-vec: materialized vs implicit. The Pallas kernels
+realize (2) on TPU with the shift fused (validated in interpret mode;
+wall-clock timing of interpret mode is meaningless, so the TPU claim is the
+FLOP/byte ledger + the identical-output check)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.core.reduction import SvenOperator, build_svm_dataset, gram_blocks, gram_reference
+from repro.data.synthetic import make_regression
+
+
+def run():
+    n, p, t = 2000, 600, 1.5
+    X, y, _ = make_regression(n, p, seed=0, dtype=jnp.float32)
+
+    ref = jax.jit(lambda X, y: gram_reference(X, y, t))
+    blk = jax.jit(lambda X, y: gram_blocks(X, y, t))
+    t_ref = time_call(ref, X, y)
+    t_blk = time_call(blk, X, y)
+    emit("gram_paper_faithful", t_ref, f"macs={4 * p * p * n:.2e}")
+    emit("gram_block_identity", t_blk,
+         f"macs={p * p * n:.2e} speedup={t_ref / t_blk:.2f}x (4x fewer MACs)")
+
+    op = SvenOperator(X=X, y=y, t=t)
+    Xhat, yhat = build_svm_dataset(X, y, t)
+    w = jax.random.normal(jax.random.PRNGKey(0), (n,), jnp.float32)
+    mv_mat = jax.jit(lambda w: Xhat @ w)
+    mv_imp = jax.jit(op.xhat_matvec)
+    t_mat = time_call(mv_mat, w)
+    t_imp = time_call(mv_imp, w)
+    emit("primal_matvec_materialized", t_mat, f"bytes~{Xhat.size * 4:.2e}")
+    emit("primal_matvec_implicit", t_imp,
+         f"bytes~{X.size * 4:.2e} speedup={t_mat / t_imp:.2f}x (2x fewer reads)")
+
+
+if __name__ == "__main__":
+    run()

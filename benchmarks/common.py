@@ -1,0 +1,75 @@
+"""Shared benchmark utilities: timing, CSV emission, regime-matched problem
+suites standing in for the paper's 12 datasets (offline container)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import make_regression
+
+jax.config.update("jax_enable_x64", True)
+
+
+def time_call(fn, *args, reps: int = 3, **kw) -> float:
+    """Best-of wall time in seconds (after one warmup for jit)."""
+    out = fn(*args, **kw)
+    jax.tree.map(lambda x: x.block_until_ready() if hasattr(x, "block_until_ready") else x, out)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.tree.map(lambda x: x.block_until_ready() if hasattr(x, "block_until_ready") else x, out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def emit(name: str, seconds: float, derived: str):
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+
+
+# The paper's p >> n suite (8 datasets: GLI-85 .. E2006) — regime-matched
+# synthetic stand-ins (n, p, correlation) scaled for CPU wall-time.
+PGGN_SUITE = {
+    "gli85_like": dict(n=85, p=4000, rho=0.5),
+    "smk_can_like": dict(n=187, p=3000, rho=0.4),
+    "gla_bra_like": dict(n=180, p=3500, rho=0.4),
+    "arcene_like": dict(n=100, p=5000, rho=0.3),
+    "dorothea_like": dict(n=160, p=6000, rho=0.1),
+    "scene15_like": dict(n=200, p=2500, rho=0.3),
+    "pems_like": dict(n=120, p=2000, rho=0.6),
+    "e2006_like": dict(n=150, p=4500, rho=0.2),
+}
+
+# n >> p suite (4 datasets: MITFaces, Yahoo-LTR, YearPredictionMSD, FD)
+NGGP_SUITE = {
+    "mitfaces_like": dict(n=6000, p=150, rho=0.4),
+    "yahoo_ltr_like": dict(n=8000, p=120, rho=0.3),
+    "ymsd_like": dict(n=10000, p=90, rho=0.2),
+    "fd_like": dict(n=7000, p=200, rho=0.5),
+}
+
+
+def make_suite_problem(spec: dict, seed: int = 0):
+    X, y, _ = make_regression(spec["n"], spec["p"], k_true=max(5, spec["p"] // 100),
+                              rho=spec["rho"], noise=0.3, seed=seed)
+    return X, y
+
+
+def path_settings(X, y, lam2: float, n_points: int):
+    """(lambda1, t) settings along the CD regularization path — mirrors the
+    paper's protocol of reading t = |beta*|_1 off the glmnet path."""
+    from repro.baselines import elastic_net_cd
+    from repro.core.elastic_net import lambda1_max
+    l1max = float(lambda1_max(X, y))
+    settings = []
+    beta = None
+    for frac in np.geomspace(0.7, 0.08, n_points):
+        res = elastic_net_cd(X, y, float(frac * l1max), lam2, beta0=beta)
+        beta = res.beta
+        t = float(jnp.sum(jnp.abs(beta)))
+        if t > 1e-8:
+            settings.append((float(frac * l1max), t, beta))
+    return settings

@@ -1,0 +1,47 @@
+"""Benchmark harness — one module per paper table/figure plus framework
+micro-benches. Prints ``name,us_per_call,derived`` CSV lines.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="fewer path points")
+    ap.add_argument("--only", default="", help="comma list of module suffixes")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_crossover, bench_distributed, bench_lm_smoke,
+                            bench_nggp, bench_path, bench_pggn,
+                            bench_reduction_ops)
+
+    mods = {
+        "path": bench_path.run,
+        "reduction_ops": bench_reduction_ops.run,
+        "crossover": bench_crossover.run,
+        "pggn": (lambda: bench_pggn.run(points=2)) if args.quick else bench_pggn.run,
+        "nggp": (lambda: bench_nggp.run(points=2)) if args.quick else bench_nggp.run,
+        "distributed": bench_distributed.run,
+        "lm_smoke": bench_lm_smoke.run,
+    }
+    picked = [s for s in args.only.split(",") if s] or list(mods)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in picked:
+        try:
+            mods[name]()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name},nan,ERROR", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""End-to-end LM training driver example: trains a reduced-config model via
+the full launcher stack (sharded init, AdamW, checkpointing, supervised
+retries, deterministic data) and prints the loss curve.
+
+    PYTHONPATH=src python examples/train_lm.py --arch mamba2-130m --steps 60
+
+Full-size runs use the same entry point on a real pod:
+    python -m repro.launch.train --arch mamba2-130m --steps 500 --batch 64 ...
+"""
+import argparse
+import sys
+
+from repro.launch.train import run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--steps", type=int, default=60)
+    args = ap.parse_args()
+    loss = run(["--arch", args.arch, "--smoke", "--steps", str(args.steps),
+                "--batch", "8", "--seq", "128", "--ckpt-dir", "/tmp/repro_example_ckpt",
+                "--log-every", "5"])
+    print(f"final loss: {loss:.4f}")
+
+
+if __name__ == "__main__":
+    main()

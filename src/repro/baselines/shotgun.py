@@ -1,0 +1,68 @@
+"""Shotgun-style parallel coordinate descent (Bradley et al., ICML 2011).
+
+The paper's parallel-CD comparison point. Shotgun updates P randomly chosen
+coordinates *simultaneously* from the same residual snapshot; convergence
+holds for P up to ~p/(2*spectral_radius). We implement the synchronous
+variant as a vectorized JAX step: draw P coordinates, compute their
+soft-threshold targets from the shared residual, apply all deltas at once
+(a scatter-add) with a step damping factor. This maps onto SIMD/TPU
+hardware exactly the way Shotgun maps onto multicore.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ShotgunResult(NamedTuple):
+    beta: jax.Array
+    rounds: jax.Array
+    delta: jax.Array
+
+
+@partial(jax.jit, static_argnames=("parallel", "max_rounds"))
+def elastic_net_shotgun(
+    X: jax.Array,
+    y: jax.Array,
+    lambda1: float,
+    lambda2: float,
+    *,
+    parallel: int = 64,
+    max_rounds: int = 20000,
+    tol: float = 1e-10,
+    damping: float = 0.5,
+    seed: int = 0,
+) -> ShotgunResult:
+    n, p = X.shape
+    dtype = X.dtype
+    lambda1 = jnp.asarray(lambda1, dtype)
+    lambda2 = jnp.asarray(lambda2, dtype)
+    col_sq = jnp.sum(X * X, axis=0)
+    denom = 2.0 * col_sq + 2.0 * lambda2
+    P = min(parallel, p)
+
+    def round_step(state):
+        beta, r, key, it, _ = state
+        key, sub = jax.random.split(key)
+        js = jax.random.choice(sub, p, shape=(P,), replace=False)
+        Xj = X[:, js]                                     # (n, P)
+        bj = beta[js]
+        rho = 2.0 * (Xj.T @ r) + 2.0 * col_sq[js] * bj
+        bj_new = jnp.sign(rho) * jnp.maximum(jnp.abs(rho) - lambda1, 0.0) / denom[js]
+        delta_b = damping * (bj_new - bj)
+        beta = beta.at[js].add(delta_b)
+        r = r - Xj @ delta_b
+        return beta, r, key, it + 1, jnp.max(jnp.abs(delta_b))
+
+    def cond(state):
+        _, _, _, it, delta = state
+        return (delta > tol) & (it < max_rounds)
+
+    beta0 = jnp.zeros((p,), dtype)
+    key = jax.random.PRNGKey(seed)
+    state = (beta0, y - X @ beta0, key, jnp.zeros((), jnp.int32), jnp.asarray(jnp.inf, dtype))
+    beta, _, _, rounds, delta = jax.lax.while_loop(cond, round_step, state)
+    return ShotgunResult(beta=beta, rounds=rounds, delta=delta)

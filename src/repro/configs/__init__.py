@@ -1,0 +1,98 @@
+"""Assigned-architecture registry: one module per arch exposing
+CONFIG (full, dry-run only), SMOKE (reduced, CPU-runnable) and META
+(per-shape microbatching, long_500k applicability, notes).
+
+Shapes (assignment): every LM arch pairs with all four; decode/long lower
+`serve_step`, train_4k lowers `train_step`, prefill_32k lowers `prefill_step`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+ARCHS = [
+    "deepseek_7b",
+    "internlm2_1_8b",
+    "phi3_medium_14b",
+    "qwen2_5_14b",
+    "musicgen_large",
+    "mamba2_130m",
+    "jamba_v0_1_52b",
+    "mixtral_8x7b",
+    "deepseek_v3_671b",
+    "internvl2_26b",
+]
+
+# public ids (assignment sheet) -> module names
+ALIASES = {a.replace("_", "-"): a for a in ARCHS}
+ALIASES.update({
+    "deepseek-7b": "deepseek_7b",
+    "internlm2-1.8b": "internlm2_1_8b",
+    "phi3-medium-14b": "phi3_medium_14b",
+    "qwen2.5-14b": "qwen2_5_14b",
+    "musicgen-large": "musicgen_large",
+    "mamba2-130m": "mamba2_130m",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "internvl2-26b": "internvl2_26b",
+})
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchMeta:
+    params_b: float                      # approx parameter count (billions)
+    active_params_b: float               # activated params (MoE) else == params_b
+    train_microbatch: int = 1            # grad-accum steps for train_4k
+    long_500k: bool = False              # sub-quadratic decode applicable?
+    long_500k_note: str = ""
+    notes: str = ""
+
+
+def _mod(name: str):
+    key = ALIASES.get(name, name)
+    return importlib.import_module(f"repro.configs.{key}")
+
+
+def get_config(name: str, smoke: bool = False):
+    m = _mod(name)
+    return m.SMOKE if smoke else m.CONFIG
+
+
+def get_meta(name: str) -> ArchMeta:
+    return _mod(name).META
+
+
+def input_specs(cfg, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for the model inputs of a shape cell.
+    No allocation — exactly what .lower() consumes."""
+    sh = SHAPES[shape_name]
+    B, S = sh["global_batch"], sh["seq_len"]
+    i32 = jnp.int32
+
+    def tok(*shape):
+        return jax.ShapeDtypeStruct(shape, i32)
+
+    if sh["kind"] in ("train", "prefill"):
+        if cfg.frontend == "codebooks":
+            return {"tokens": tok(B, S, cfg.n_codebooks)}
+        if cfg.frontend == "patches":
+            P = cfg.vision_tokens
+            return {"tokens": tok(B, S - P),
+                    "patch_embeds": jax.ShapeDtypeStruct((B, P, cfg.d_model), cfg.dtype)}
+        return {"tokens": tok(B, S)}
+    # decode: one new token against a cache of S
+    if cfg.frontend == "codebooks":
+        return {"tokens": tok(B, cfg.n_codebooks)}
+    return {"tokens": tok(B)}

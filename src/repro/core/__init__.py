@@ -1,0 +1,26 @@
+"""The paper's primary contribution: Elastic Net -> squared-hinge SVM (SVEN)."""
+from repro.core.sven import sven, sven_path, SvenConfig, SvenSolution
+from repro.core.reduction import (
+    SvenOperator,
+    build_svm_dataset,
+    gram_blocks,
+    gram_reference,
+    recover_beta,
+)
+from repro.core import elastic_net
+from repro.core.screening import gap_safe_screen, sven_with_screening
+
+__all__ = [
+    "sven",
+    "sven_path",
+    "SvenConfig",
+    "SvenSolution",
+    "SvenOperator",
+    "build_svm_dataset",
+    "gram_blocks",
+    "gram_reference",
+    "recover_beta",
+    "elastic_net",
+    "gap_safe_screen",
+    "sven_with_screening",
+]

@@ -1,0 +1,238 @@
+"""Distributed SVEN: the paper's solver on the production mesh.
+
+The paper parallelizes the squared-hinge SVM on one GPU via BLAS; here the
+same matrix-op structure shards over a TPU pod with shard_map:
+
+  * features (the 2p constructed SVM samples <-> original p features) shard
+    over the FLATTENED mesh (all axes) — at (16,16) that is 256-way feature
+    parallelism;
+  * the primal Newton-CG Hessian mat-vec needs, per iteration,
+        c_loc = X_loc^T v        (local GEMV over the feature shard)
+        d_loc = mask epilogue    (local)
+        Hv    = psum(X_loc d_loc) + rank-1 terms   (ONE all-reduce of an
+                n-vector per CG iteration)
+  * the dual Gram build computes block-rows K_loc = Z_loc^T Z against an
+    all-gathered Z panel (one all-gather of X per solve, amortized over all
+    Newton iterations — the "kernel caching" regime of the paper).
+
+Distribution-by-construction: every collective is explicit, so the dry-run
+HLO for the sven_* cells shows exactly one psum per CG step + one gather per
+Gram build (EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.svm.primal_newton import solve_primal_newton
+
+
+def _flat_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def feature_sharding(mesh: Mesh) -> NamedSharding:
+    """X (n, p) with p sharded over every mesh axis."""
+    return NamedSharding(mesh, P(None, _flat_axes(mesh)))
+
+
+def dual_sample_sharding(mesh: Mesh) -> NamedSharding:
+    """K (2p, 2p) row-sharded over the full mesh."""
+    return NamedSharding(mesh, P(_flat_axes(mesh), None))
+
+
+def distributed_gram(mesh: Mesh, X: jax.Array, y: jax.Array, t: float,
+                     row_shard_out: bool = True) -> jax.Array:
+    """K = Zhat^T Zhat (2p, 2p) with SAMPLES (n) sharded over the full mesh.
+
+    The n >> p dual regime: each device reduces its sample shard
+        G_loc = X_loc^T X_loc  (p,p),  u_loc = X_loc^T y_loc / t,
+        s_loc = y_loc^T y_loc / t^2
+    followed by ONE psum of (p^2 + p + 1) floats; the 4 block quadrants of K
+    (the kernels/gram.py identity) assemble locally with zero additional
+    communication. Contrast: the paper-faithful path would all-gather the
+    (2p, n) constructed matrix — n/p times more wire bytes.
+    """
+    axes = _flat_axes(mesh)
+    p = X.shape[1]
+
+    def local(X_loc, y_loc):
+        G = jax.lax.psum(X_loc.T @ X_loc, axes)                 # (p, p)
+        u = jax.lax.psum((X_loc.T @ y_loc) / t, axes)           # (p,)
+        s = jax.lax.psum((y_loc @ y_loc) / (t * t), axes)
+        a = u[:, None]
+        b = u[None, :]
+        top = jnp.concatenate([G - a - b + s, -G - a + b + s], axis=1)
+        bot = jnp.concatenate([-G + a - b + s, G + a + b + s], axis=1)
+        K = jnp.concatenate([top, bot], axis=0)                 # (2p, 2p) replicated
+        if row_shard_out:
+            rank = jax.lax.axis_index(axes)
+            n_dev = jax.lax.psum(1, axes)
+            rows = (2 * p) // n_dev
+            K = jax.lax.dynamic_slice_in_dim(K, rank * rows, rows, axis=0)
+        return K
+
+    out_spec = P(axes, None) if row_shard_out else P()
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axes, None), P(axes)),
+        out_specs=out_spec,
+        check_rep=False,
+    )(X, y)
+
+
+def distributed_gram_rs(mesh: Mesh, X: jax.Array, y: jax.Array, t: float) -> jax.Array:
+    """Reduce-scatter Gram (§Perf iteration on distributed_gram).
+
+    all-reduce(G) gives every device all of G (2(n-1)/n x p^2 wire) but a
+    device only assembles its own K row block. psum_scatter hands device r
+    just its p/n_dev G rows (half the wire, 1/n_dev the G memory); the K rows
+    emitted are the feature-interleaved permutation [ +rows_r ; -rows_r ] —
+    labels via interleaved_labels(), solvers are permutation-equivariant."""
+    axes = _flat_axes(mesh)
+    p = X.shape[1]
+
+    def local(X_loc, y_loc):
+        n_dev = jax.lax.psum(1, axes)
+        G_part = X_loc.T @ X_loc                               # (p, p) partial
+        G_rows = jax.lax.psum_scatter(G_part, axes, scatter_dimension=0,
+                                      tiled=True)              # (p/n_dev, p)
+        u = jax.lax.psum((X_loc.T @ y_loc) / t, axes)          # (p,)
+        s = jax.lax.psum((y_loc @ y_loc) / (t * t), axes)
+        rank = jax.lax.axis_index(axes)
+        rows = p // n_dev
+        u_loc = jax.lax.dynamic_slice_in_dim(u, rank * rows, rows)
+        a = u_loc[:, None]
+        b = u[None, :]
+        top = jnp.concatenate([G_rows - a - b + s, -G_rows - a + b + s], axis=1)
+        bot = jnp.concatenate([-G_rows + a - b + s, G_rows + a + b + s], axis=1)
+        return jnp.concatenate([top, bot], axis=0)             # (2 p/n_dev, 2p)
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(P(axes, None), P(axes)),
+                     out_specs=P(axes, None), check_rep=False)(X, y)
+
+
+def distributed_gram_rs_syrk(mesh: Mesh, X: jax.Array, y: jax.Array, t: float) -> jax.Array:
+    """distributed_gram_rs + level-1 SYRK blocking: G = X^T X is symmetric, so
+    with X = [X1 X2] only (G11, G12, G22) are computed — 3/4 of the MACs; G21
+    is a local transpose. (Recursive halving would approach 1/2.)"""
+    axes = _flat_axes(mesh)
+    p = X.shape[1]
+    h = p // 2
+
+    def local(X_loc, y_loc):
+        n_dev = jax.lax.psum(1, axes)
+        X1, X2 = X_loc[:, :h], X_loc[:, h:]
+        G11 = X1.T @ X1
+        G12 = X1.T @ X2
+        G22 = X2.T @ X2
+        G_part = jnp.concatenate([
+            jnp.concatenate([G11, G12], axis=1),
+            jnp.concatenate([G12.T, G22], axis=1)], axis=0)
+        G_rows = jax.lax.psum_scatter(G_part, axes, scatter_dimension=0, tiled=True)
+        u = jax.lax.psum((X_loc.T @ y_loc) / t, axes)
+        s = jax.lax.psum((y_loc @ y_loc) / (t * t), axes)
+        rank = jax.lax.axis_index(axes)
+        rows = p // n_dev
+        u_loc = jax.lax.dynamic_slice_in_dim(u, rank * rows, rows)
+        a = u_loc[:, None]
+        b = u[None, :]
+        top = jnp.concatenate([G_rows - a - b + s, -G_rows - a + b + s], axis=1)
+        bot = jnp.concatenate([-G_rows + a - b + s, G_rows + a + b + s], axis=1)
+        return jnp.concatenate([top, bot], axis=0)
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(P(axes, None), P(axes)),
+                     out_specs=P(axes, None), check_rep=False)(X, y)
+
+
+def interleaved_labels(p: int, n_dev: int, dtype) -> jax.Array:
+    """Labels matching distributed_gram_rs's row permutation."""
+    rows = p // n_dev
+    one = jnp.ones((rows,), dtype)
+    return jnp.tile(jnp.concatenate([one, -one]), n_dev)
+
+
+def distributed_gram_paper(mesh: Mesh, X: jax.Array, y: jax.Array, t: float) -> jax.Array:
+    """PAPER-FAITHFUL baseline for the §Perf hillclimb: materialize the
+    constructed (n_loc, 2p) matrix Zhat per sample shard (exactly what the
+    MATLAB listing does before calling the SVM) and reduce K = psum(Z^T Z):
+    4x the MACs and 2x the HBM reads of distributed_gram's block identity."""
+    axes = _flat_axes(mesh)
+    p = X.shape[1]
+
+    def local(X_loc, y_loc):
+        shift = (y_loc / t)[:, None]
+        Z_loc = jnp.concatenate([X_loc - shift, -(X_loc + shift)], axis=1)  # (n_loc, 2p)
+        return jax.lax.psum(Z_loc.T @ Z_loc, axes)
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(P(axes, None), P(axes)),
+                     out_specs=P(), check_rep=False)(X, y)
+
+
+def make_distributed_hessian_matvec(mesh: Mesh, X: jax.Array, y: jax.Array,
+                                    t: float, C: float):
+    """Primal-mode H v mat-vec with ONE psum per call.
+
+    v (n,) replicated; features sharded. act masks (2p,) live feature-sharded
+    as (act_top_loc, act_bot_loc). Returns a closure for solve_primal_newton's
+    hess_matvec hook (act supplied per Newton iteration, replicated (2p,) in
+    shard order)."""
+    axes = _flat_axes(mesh)
+    n_dev = 1
+    for a in axes:
+        n_dev *= mesh.shape[a]
+    p = X.shape[1]
+    p_loc = p // n_dev
+
+    def local(X_loc, y_full, act, v):
+        rank = jax.lax.axis_index(axes)
+        a_t = jax.lax.dynamic_slice_in_dim(act, rank * p_loc, p_loc)
+        a_b = jax.lax.dynamic_slice_in_dim(act, p + rank * p_loc, p_loc)
+        c = X_loc.T @ v                                   # (p_loc,)
+        byv = (y_full @ v) / t                            # scalar (replicated)
+        u_t = a_t * (c - byv)
+        u_b = a_b * (c + byv)
+        d = u_t + u_b
+        e_loc = jnp.sum(u_b) - jnp.sum(u_t)
+        partial_hv = X_loc @ d + (y_full / t) * e_loc     # (n,)
+        hv = jax.lax.psum(partial_hv, axes)               # ONE all-reduce
+        return v + 2.0 * C * hv
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P(None, axes), P(), P(), P()),
+                   out_specs=P(), check_rep=False)
+
+    def hess_matvec(v, act):
+        return fn(X, y, act.astype(v.dtype), v)
+
+    return hess_matvec
+
+
+def sven_primal_distributed(mesh: Mesh, X: jax.Array, y: jax.Array, t: float,
+                            lambda2: float, *, tol: float = 1e-8,
+                            max_newton: int = 40, cg_iters: int = 200):
+    """Full distributed primal SVEN solve; beta via Algorithm 1 recovery.
+
+    Note: the act-mask layout here is the canonical [all +, all -] ordering —
+    the gradient/margin path computes on the replicated implicit operator
+    while the O(np) Hessian mat-vecs (the hot loop) run feature-sharded."""
+    from repro.core.reduction import SvenOperator, recover_beta
+
+    n, p = X.shape
+    C = 1.0 / (2.0 * max(lambda2, 1e-12))
+    op = SvenOperator(X=X, y=y, t=t)
+    yhat = jnp.concatenate([jnp.ones((p,), X.dtype), -jnp.ones((p,), X.dtype)])
+    hess = make_distributed_hessian_matvec(mesh, X, y, t, C)
+    res = solve_primal_newton(op.xhat_matvec, op.xhat_rmatvec, yhat, C, n,
+                              tol=tol, max_newton=max_newton, cg_iters=cg_iters,
+                              hess_matvec=hess)
+    alpha = C * jnp.maximum(1.0 - yhat * op.xhat_matvec(res.w), 0.0)
+    return recover_beta(alpha, t), res

@@ -1,0 +1,100 @@
+"""Elastic Net problem specification, objectives and optimality diagnostics.
+
+Conventions follow the paper (Zhou et al., AAAI 2015):
+
+    constrained form:  min_beta ||X beta - y||_2^2 + lambda2 ||beta||_2^2
+                       s.t. |beta|_1 <= t                                  (1)
+
+    penalized form:    min_beta ||X beta - y||_2^2 + lambda2 ||beta||_2^2
+                       + lambda1 |beta|_1                                  (pen)
+
+with X in R^{n x p} (rows = samples), y in R^n. The two forms are equivalent:
+if beta* solves (pen) with lambda1 > 0 then beta* solves (1) with
+t = |beta*|_1 (the constraint is tight), and the KKT multiplier of (1)'s
+L1 constraint equals lambda1. NOTE: no 1/2 or 1/n factors anywhere — this
+matches the paper, not glmnet's internal scaling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticNetProblem:
+    """An Elastic Net instance in the paper's constrained form."""
+
+    X: jax.Array  # (n, p) design matrix, rows = samples
+    y: jax.Array  # (n,) centered response
+    t: float      # L1 budget (> 0)
+    lambda2: float  # L2 regularization (>= 0; 0 => Lasso)
+
+    @property
+    def n(self) -> int:
+        return self.X.shape[0]
+
+    @property
+    def p(self) -> int:
+        return self.X.shape[1]
+
+
+def objective_constrained(X: jax.Array, y: jax.Array, beta: jax.Array, lambda2: float) -> jax.Array:
+    """||X beta - y||^2 + lambda2 ||beta||^2 (the L1 part is a constraint)."""
+    r = X @ beta - y
+    return r @ r + lambda2 * (beta @ beta)
+
+
+def objective_penalized(
+    X: jax.Array, y: jax.Array, beta: jax.Array, lambda1: float, lambda2: float
+) -> jax.Array:
+    return objective_constrained(X, y, beta, lambda2) + lambda1 * jnp.sum(jnp.abs(beta))
+
+
+def smooth_grad(X: jax.Array, y: jax.Array, beta: jax.Array, lambda2: float) -> jax.Array:
+    """Gradient of the smooth part: 2 X^T (X beta - y) + 2 lambda2 beta."""
+    return 2.0 * (X.T @ (X @ beta - y)) + 2.0 * lambda2 * beta
+
+
+def kkt_multiplier(
+    X: jax.Array, y: jax.Array, beta: jax.Array, lambda2: float, zero_tol: float = 1e-8
+) -> jax.Array:
+    """Estimate the L1-constraint multiplier nu >= 0 from active coordinates.
+
+    At an optimum of (1) with a tight constraint there exists nu >= 0 with
+        g_j = -nu * sign(beta_j)   for beta_j != 0
+        |g_j| <= nu                for beta_j == 0
+    where g = smooth_grad. We estimate nu as the mean of -g_j*sign(beta_j)
+    over active coordinates (they should all agree).
+    """
+    g = smooth_grad(X, y, beta, lambda2)
+    active = jnp.abs(beta) > zero_tol
+    nu_each = -g * jnp.sign(beta)
+    denom = jnp.maximum(jnp.sum(active), 1)
+    return jnp.sum(jnp.where(active, nu_each, 0.0)) / denom
+
+
+def kkt_violation(
+    X: jax.Array, y: jax.Array, beta: jax.Array, lambda2: float, zero_tol: float = 1e-8
+) -> jax.Array:
+    """Max KKT residual of (1) at beta (0 at an exact optimum).
+
+    Checks (a) active coordinates agree on nu, (b) inactive coordinates
+    satisfy |g_j| <= nu. Scale-free-ish: normalized by (1 + nu).
+    """
+    g = smooth_grad(X, y, beta, lambda2)
+    active = jnp.abs(beta) > zero_tol
+    nu = kkt_multiplier(X, y, beta, lambda2, zero_tol)
+    act_res = jnp.where(active, jnp.abs(-g * jnp.sign(beta) - nu), 0.0)
+    inact_res = jnp.where(~active, jnp.maximum(jnp.abs(g) - nu, 0.0), 0.0)
+    return jnp.maximum(jnp.max(act_res), jnp.max(inact_res)) / (1.0 + jnp.abs(nu))
+
+
+def lambda1_max(X: jax.Array, y: jax.Array) -> jax.Array:
+    """Smallest lambda1 for which the penalized solution is beta = 0.
+
+    From the (pen) KKT at 0: |2 x_j^T y| <= lambda1 for all j.
+    """
+    return 2.0 * jnp.max(jnp.abs(X.T @ y))

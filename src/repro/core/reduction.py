@@ -1,0 +1,158 @@
+"""The paper's reduction: Elastic Net -> squared-hinge SVM (Algorithm 1).
+
+Given (X in R^{n x p}, y in R^n, t > 0, lambda2 > 0) construct a binary
+classification problem with m = 2p samples in d = n dimensions:
+
+    Xhat_1 = X - (1/t) y 1^T    (columns are the +1 class)
+    Xhat_2 = X + (1/t) y 1^T    (columns are the -1 class)
+    Xhat   = [Xhat_1, Xhat_2]   as columns; SVM sample i is the i-th column
+    yhat   = [+1_p ; -1_p],  C  = 1 / (2 lambda2)
+
+If alpha* solves the SVM dual (3), the Elastic Net solution is
+
+    beta* = t * (alpha*[:p] - alpha*[p:]) / |alpha*|_1.
+
+NOTE on the paper's MATLAB listing: line 3 uses "[A; B]'" (vertical concat)
+which would produce a (p x 2n) matrix — inconsistent with the math (m = 2p
+samples of dimension n). We follow the math: Xnew = [Xhat_1, Xhat_2]^T of
+shape (2p, n), samples as rows.
+
+This module provides BOTH an explicit construction (reference, used by tests
+and the paper-faithful baseline) and matrix-free operators that never
+materialize the (2p, n) matrix — the TPU-native path (see DESIGN.md §2): all
+solver mat-vecs reduce to ops on the original (n, p) X plus rank-1 terms,
+halving FLOPs and removing a full HBM materialization.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# Explicit construction (paper-faithful)
+# --------------------------------------------------------------------------
+
+def build_svm_dataset(X: jax.Array, y: jax.Array, t: float) -> Tuple[jax.Array, jax.Array]:
+    """Return (Xhat, yhat): Xhat (2p, n) rows = SVM samples, yhat (2p,) labels."""
+    shift = (y / t)[None, :]          # (1, n) broadcast over the p columns
+    Xt = X.T                          # (p, n): row j = original feature j
+    Xhat = jnp.concatenate([Xt - shift, Xt + shift], axis=0)  # (2p, n)
+    p = X.shape[1]
+    yhat = jnp.concatenate([jnp.ones((p,), X.dtype), -jnp.ones((p,), X.dtype)])
+    return Xhat, yhat
+
+
+def svm_C(lambda2: float) -> float:
+    """C = 1/(2 lambda2); capped for the Lasso limit lambda2 -> 0."""
+    return 1.0 / (2.0 * max(lambda2, 1e-12))
+
+
+def recover_beta(alpha: jax.Array, t: float) -> jax.Array:
+    """beta = t (alpha_top - alpha_bot) / sum(alpha); Algorithm 1 line 11."""
+    p = alpha.shape[0] // 2
+    s = jnp.sum(alpha)
+    # Degenerate |alpha|_1 = 0 (no support vectors) is meaningless per the
+    # paper's footnote 1; guard to avoid NaN and return beta = 0.
+    safe = jnp.where(s > 0, s, 1.0)
+    return jnp.where(s > 0, t * (alpha[:p] - alpha[p:]) / safe, jnp.zeros((p,), alpha.dtype))
+
+
+def alpha_from_primal(Xhat: jax.Array, yhat: jax.Array, w: jax.Array, C: float) -> jax.Array:
+    """Dual from primal solution: alpha_i = C max(0, 1 - yhat_i x_i^T w)."""
+    return C * jnp.maximum(1.0 - yhat * (Xhat @ w), 0.0)
+
+
+# --------------------------------------------------------------------------
+# Matrix-free operators (TPU-native; beyond-paper optimization)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SvenOperator:
+    """Matrix-free Xhat / Zhat operators built from the original (X, y, t).
+
+    With a = X^T w (p,), b = y^T w / t (scalar):
+        Xhat @ w          = [a - b ; a + b]
+        Xhat^T @ v        = X (v_top + v_bot) + (y/t) (sum(v_bot) - sum(v_top))
+        Zhat @ v          = X (v_top - v_bot) - (y/t) sum(v)          (n,)
+        Zhat^T @ u        = [X^T u - (y^T u/t) 1 ; -X^T u - (y^T u/t) 1]
+    where Zhat = [Xhat_1, -Xhat_2] (n x 2p) is the label-scaled data of the
+    dual (3). Every product is O(np) on the original X — the (2p, n) matrix
+    never exists.
+    """
+
+    X: jax.Array   # (n, p)
+    y: jax.Array   # (n,)
+    t: float
+
+    @property
+    def n(self) -> int:
+        return self.X.shape[0]
+
+    @property
+    def p(self) -> int:
+        return self.X.shape[1]
+
+    @property
+    def m(self) -> int:
+        return 2 * self.X.shape[1]
+
+    def xhat_matvec(self, w: jax.Array) -> jax.Array:
+        a = self.X.T @ w
+        b = (self.y @ w) / self.t
+        return jnp.concatenate([a - b, a + b])
+
+    def xhat_rmatvec(self, v: jax.Array) -> jax.Array:
+        p = self.p
+        vt, vb = v[:p], v[p:]
+        return self.X @ (vt + vb) + (self.y / self.t) * (jnp.sum(vb) - jnp.sum(vt))
+
+    def zhat_matvec(self, v: jax.Array) -> jax.Array:
+        p = self.p
+        vt, vb = v[:p], v[p:]
+        return self.X @ (vt - vb) - (self.y / self.t) * jnp.sum(v)
+
+    def zhat_rmatvec(self, u: jax.Array) -> jax.Array:
+        a = self.X.T @ u
+        b = (self.y @ u) / self.t
+        return jnp.concatenate([a - b, -a - b])
+
+    def kernel_matvec(self, v: jax.Array) -> jax.Array:
+        """K v with K = Zhat^T Zhat (2p x 2p), in O(np)."""
+        return self.zhat_rmatvec(self.zhat_matvec(v))
+
+    def margins(self, w: jax.Array) -> jax.Array:
+        """yhat * (Xhat @ w) as used by the squared hinge."""
+        p = self.p
+        o = self.xhat_matvec(w)
+        return jnp.concatenate([o[:p], -o[p:]])
+
+
+def gram_blocks(X: jax.Array, y: jax.Array, t: float) -> jax.Array:
+    """Assemble K = Zhat^T Zhat (2p x 2p) from p x p blocks.
+
+    Beyond-paper optimization: with G = X^T X, u = X^T y / t, s = y^T y / t^2,
+        K = [[ G - u1' - 1u' + s ,  -G - u1' + 1u' + s ],
+             [ -G + u1' - 1u' + s,   G + u1' + 1u' + s ]]
+    costing one p x p Gram (np^2 MACs) instead of the naive (2p)^2 n — a 4x
+    FLOP reduction over materializing Zhat (what the MATLAB/GPU code pays).
+    """
+    G = X.T @ X                       # (p, p)
+    u = (X.T @ y) / t                 # (p,)
+    s = (y @ y) / (t * t)             # scalar
+    u1 = u[:, None]
+    u2 = u[None, :]
+    top = jnp.concatenate([G - u1 - u2 + s, -G - u1 + u2 + s], axis=1)
+    bot = jnp.concatenate([-G + u1 - u2 + s, G + u1 + u2 + s], axis=1)
+    return jnp.concatenate([top, bot], axis=0)
+
+
+def gram_reference(X: jax.Array, y: jax.Array, t: float) -> jax.Array:
+    """Paper-faithful K: materialize Zhat then Zhat^T Zhat."""
+    Xhat, yhat = build_svm_dataset(X, y, t)
+    Zhat = (yhat[:, None] * Xhat).T   # (n, 2p)
+    return Zhat.T @ Zhat

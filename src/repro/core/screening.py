@@ -1,0 +1,85 @@
+"""Gap-safe feature screening for the Elastic Net (beyond-paper optimization).
+
+Before running the SVM reduction, provably-inactive features can be discarded
+(Ndiaye et al., "Gap Safe screening rules", JMLR 2017), shrinking the
+constructed SVM problem from 2p to 2p_kept samples — a direct multiplier on
+the Gram/Newton cost that the paper leaves on the table.
+
+Derivation under this repo's scaling (P(b) = ||Xb-y||^2 + l2||b||^2 + l1|b|_1):
+the ridge term folds into an augmented Lasso via A = [X; sqrt(l2) I],
+b = [y; 0]: P = 2*(1/2||b-Ab||^2 + (l1/2)|b|_1). With lam = l1/2 and any
+primal point beta:
+
+    resid   = [y - X beta ; -sqrt(l2) beta]
+    corr_j  = x_j^T (y - X beta) - l2 beta_j              (= a_j^T resid)
+    theta   = resid / max(lam, ||corr||_inf)              (dual feasible)
+    gap     = P_half(beta) - D(theta) >= 0
+    DISCARD j  if  |corr_j| / scale + sqrt(2 gap) / lam * ||a_j|| < 1,
+    ||a_j|| = sqrt(||x_j||^2 + l2)
+
+Safe: a discarded j provably has beta*_j = 0 (tested: the rule never removes
+the CD solution's support, for any warm point).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ScreenResult(NamedTuple):
+    keep: jax.Array        # (p,) bool — features that MAY be active
+    gap: jax.Array         # duality gap at (beta, theta)
+    n_kept: jax.Array
+
+
+def gap_safe_screen(X: jax.Array, y: jax.Array, beta: jax.Array,
+                    lambda1: float, lambda2: float) -> ScreenResult:
+    lam = lambda1 / 2.0
+    r = y - X @ beta
+    corr = X.T @ r - lambda2 * beta                        # (p,)
+    scale = jnp.maximum(lam, jnp.max(jnp.abs(corr)))
+
+    # P_half and D(theta) in the augmented-Lasso convention
+    res_sq = r @ r + lambda2 * (beta @ beta)               # ||b - A beta||^2
+    p_half = 0.5 * res_sq + lam * jnp.sum(jnp.abs(beta))
+    b_sq = y @ y
+    btheta = (y @ r) / scale
+    theta_sq = res_sq / (scale * scale)
+    # D = 1/2||b||^2 - lam^2/2 ||theta - b/lam||^2
+    d_val = 0.5 * b_sq - 0.5 * lam * lam * (
+        theta_sq - 2.0 * btheta / lam + b_sq / (lam * lam))
+    gap = jnp.maximum(p_half - d_val, 0.0)
+
+    radius = jnp.sqrt(2.0 * gap) / lam
+    col_norm = jnp.sqrt(jnp.sum(X * X, axis=0) + lambda2)
+    keep = (jnp.abs(corr) / scale + radius * col_norm) >= 1.0
+    return ScreenResult(keep=keep, gap=gap, n_kept=jnp.sum(keep))
+
+
+def sven_with_screening(X, y, t, lambda2, *, warm_beta=None, config=None):
+    """Screen-then-solve: estimate lambda1 from a warm beta (or a few FISTA
+    steps), drop provably-inactive columns, run SVEN on the survivors and
+    scatter beta back to p dims. Exactness is preserved (safe rule)."""
+    from repro.baselines.fista import elastic_net_fista
+    from repro.core import elastic_net as en
+    from repro.core.sven import SvenConfig, sven
+
+    config = config or SvenConfig()
+    p = X.shape[1]
+    if warm_beta is None:
+        # cheap warm start at the lambda1 implied by a rough path position
+        l1_guess = 0.2 * float(en.lambda1_max(X, y))
+        warm_beta = elastic_net_fista(X, y, l1_guess, lambda2, max_iters=400).beta
+    # lambda1 consistent with the constrained-form multiplier at warm_beta
+    lam1 = float(en.kkt_multiplier(X, y, warm_beta, lambda2))
+    lam1 = max(lam1, 1e-8)
+    scr = gap_safe_screen(X, y, warm_beta, lam1, lambda2)
+    idx = jnp.where(scr.keep, size=p, fill_value=-1)[0]
+    n_kept = int(scr.n_kept)
+    idx = idx[:n_kept]
+    X_red = X[:, idx]
+    sol = sven(X_red, y, t, lambda2, config)
+    beta = jnp.zeros((p,), X.dtype).at[idx].set(sol.beta)
+    return beta, sol, scr

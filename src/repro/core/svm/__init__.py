@@ -1,0 +1,11 @@
+from repro.core.svm.primal_newton import solve_primal_newton, PrimalResult
+from repro.core.svm.dual_newton import solve_dual_newton, DualResult
+from repro.core.svm.dual_fista import solve_dual_fista
+
+__all__ = [
+    "solve_primal_newton",
+    "solve_dual_newton",
+    "solve_dual_fista",
+    "PrimalResult",
+    "DualResult",
+]

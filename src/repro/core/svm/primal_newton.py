@@ -1,0 +1,122 @@
+"""Squared-hinge linear SVM, primal Newton-CG (Chapelle 2007), no bias.
+
+    min_w f(w) = 1/2 ||w||^2 + C sum_i max(0, 1 - yhat_i w^T xhat_i)^2
+
+Newton system at the current support-vector set SV = {i : margin_i < 1}:
+
+    H = I + 2C Xhat_SV^T Xhat_SV
+    H d = grad,   grad = w + 2C Xhat^T (act * (Xhat w - yhat))
+
+solved matrix-free with conjugate gradients (the H mat-vec is two Xhat
+products masked by `act`), followed by a backtracking line search. For a
+fixed SV set f is quadratic, so the method takes full steps near the
+solution and terminates in a handful of iterations — all heavy work is
+BLAS-3-shaped, which is the property the paper's GPU claim rests on.
+
+The solver is expressed entirely with jax.lax control flow so it jits and
+shards (the mat-vec callables may close over pjit-sharded arrays or
+shard_map collectives).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PrimalResult(NamedTuple):
+    w: jax.Array
+    iters: jax.Array
+    grad_norm: jax.Array
+    objective: jax.Array
+
+
+def _cg(matvec: Callable, b: jax.Array, maxiter: int, tol: float) -> jax.Array:
+    """Plain CG on SPD `matvec`; fixed-shape while_loop, early exit on tol."""
+
+    def body(state):
+        x, r, pvec, rs, it = state
+        Ap = matvec(pvec)
+        denom = pvec @ Ap
+        alpha = rs / jnp.where(denom > 0, denom, 1.0)
+        x = x + alpha * pvec
+        r = r - alpha * Ap
+        rs_new = r @ r
+        beta = rs_new / jnp.where(rs > 0, rs, 1.0)
+        pvec = r + beta * pvec
+        return x, r, pvec, rs_new, it + 1
+
+    def cond(state):
+        _, _, _, rs, it = state
+        return (rs > tol * tol) & (it < maxiter)
+
+    x0 = jnp.zeros_like(b)
+    state = (x0, b, b, b @ b, jnp.zeros((), jnp.int32))
+    x, *_ = jax.lax.while_loop(cond, body, state)
+    return x
+
+
+def solve_primal_newton(
+    matvec: Callable[[jax.Array], jax.Array],     # w (d,) -> Xhat @ w (m,)
+    rmatvec: Callable[[jax.Array], jax.Array],    # v (m,) -> Xhat^T v (d,)
+    yhat: jax.Array,                              # (m,) labels in {+1,-1}
+    C: float,
+    d: int,
+    *,
+    tol: float = 1e-8,
+    max_newton: int = 50,
+    cg_iters: int = 250,
+    w0: jax.Array | None = None,
+    hess_matvec: Callable | None = None,          # (v, act) -> H v override (Pallas path)
+) -> PrimalResult:
+    dtype = yhat.dtype
+    C = jnp.asarray(C, dtype)
+
+    def f_value(w):
+        o = matvec(w)
+        act = (yhat * o) < 1.0
+        xi = jnp.where(act, 1.0 - yhat * o, 0.0)
+        return 0.5 * (w @ w) + C * (xi @ xi)
+
+    def newton_body(state):
+        w, it, _ = state
+        o = matvec(w)
+        act = ((yhat * o) < 1.0).astype(dtype)
+        grad = w + 2.0 * C * rmatvec(act * (o - yhat))
+
+        if hess_matvec is None:
+            def hess_mv(v):
+                return v + 2.0 * C * rmatvec(act * matvec(v))
+        else:
+            def hess_mv(v):
+                return hess_matvec(v, act)
+
+        step = _cg(hess_mv, grad, cg_iters, tol * 1e-2)
+
+        # Backtracking (Armijo) line search on f along -step.
+        f0 = f_value(w)
+        gd = grad @ step
+
+        def ls_body(ls):
+            s, _ = ls
+            return s * 0.5, f_value(w - s * 0.5 * step)
+
+        def ls_cond(ls):
+            s, fv = ls
+            return (fv > f0 - 1e-4 * s * gd) & (s > 1e-10)
+
+        s, _ = jax.lax.while_loop(ls_cond, ls_body, (jnp.asarray(1.0, dtype), f_value(w - step)))
+        w_new = w - s * step
+        gnorm = jnp.max(jnp.abs(grad))
+        return w_new, it + 1, gnorm
+
+    def newton_cond(state):
+        _, it, gnorm = state
+        return (gnorm > tol) & (it < max_newton)
+
+    w_init = jnp.zeros((d,), dtype) if w0 is None else w0.astype(dtype)
+    state = (w_init, jnp.zeros((), jnp.int32), jnp.asarray(jnp.inf, dtype))
+    w, iters, gnorm = jax.lax.while_loop(newton_cond, newton_body, state)
+    return PrimalResult(w=w, iters=iters, grad_norm=gnorm, objective=f_value(w))

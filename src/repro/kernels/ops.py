@@ -1,0 +1,155 @@
+"""Jitted public wrappers for the Pallas kernels: padding, dtype handling,
+interpret-mode fallback on CPU, and a `use_pallas=False` escape hatch that
+routes to the pure-jnp oracle (ref.py) — used for A/B testing and as the
+path taken for shapes where kernel tiling would be wasteful.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import gram as _gram
+from repro.kernels import hinge as _hinge
+from repro.kernels import ref as _ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+@partial(jax.jit, static_argnames=("bm", "bn", "bk", "flatten", "use_pallas", "interpret"))
+def shifted_gram(
+    X: jax.Array,
+    y: jax.Array,
+    t: jax.Array | float,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    flatten: bool = True,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """K = Zhat^T Zhat of the SVEN dual, as (2p, 2p) (flatten) or (2,2,p,p)."""
+    n, p = X.shape
+    if not use_pallas:
+        Kb = _ref.gram_blocks_ref(X, y, t)
+        return _ref.flatten_gram(Kb) if flatten else Kb
+    interp = _on_cpu() if interpret is None else interpret
+    Xp = _pad_to(_pad_to(X, 0, bk), 1, max(bm, bn))
+    y2d = _pad_to(y[:, None], 0, bk).astype(X.dtype)
+    invt = (1.0 / jnp.asarray(t, jnp.float32)).reshape(1, 1)
+    Kb = _gram.gram_pallas_raw(Xp, y2d, invt, bm=bm, bn=bn, bk=bk, interpret=interp)
+    Kb = Kb[:, :, :p, :p]
+    return _ref.flatten_gram(Kb) if flatten else Kb
+
+
+@partial(jax.jit, static_argnames=("bp", "bn", "bk", "use_pallas", "interpret"))
+def hinge_hessian_matvec(
+    X: jax.Array,
+    y: jax.Array,
+    t: jax.Array | float,
+    C: jax.Array | float,
+    act_top: jax.Array,
+    act_bot: jax.Array,
+    v: jax.Array,
+    *,
+    bp: int = 512,
+    bn: int = 512,
+    bk: int = 512,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """H v = v + 2C Xhat^T(act . (Xhat v)) via two fused GEMV passes."""
+    if not use_pallas:
+        return _ref.hessian_matvec_ref(X, y, t, C, act_top, act_bot, v)
+    interp = _on_cpu() if interpret is None else interpret
+    n, p = X.shape
+    bp_ = min(bp, _next_mult(p))
+    bk1 = min(bk, _next_mult(n))
+    Xp1 = _pad_to(_pad_to(X, 0, bk1), 1, bp_)
+    v2d = _pad_to(v[:, None], 0, bk1).astype(jnp.float32)
+    y2d = _pad_to(y[:, None], 0, bk1).astype(jnp.float32)
+    at2d = _pad_to(act_top[:, None].astype(jnp.float32), 0, bp_)
+    ab2d = _pad_to(act_bot[:, None].astype(jnp.float32), 0, bp_)
+    invt = (1.0 / jnp.asarray(t, jnp.float32)).reshape(1, 1)
+    d2d, e_part = _hinge.hinge_xtv_raw(Xp1, v2d, y2d, at2d, ab2d, invt,
+                                       bp=bp_, bk=bk1, interpret=interp)
+    e = jnp.sum(e_part)
+
+    bn_ = min(bn, _next_mult(n))
+    bk2 = min(bk, _next_mult(p))
+    Xp2 = _pad_to(_pad_to(X, 0, bn_), 1, bk2)
+    d2d = _pad_to(d2d[: p], 0, bk2)
+    y2d2 = _pad_to(y[:, None], 0, bn_).astype(jnp.float32)
+    v2d2 = _pad_to(v[:, None], 0, bn_).astype(jnp.float32)
+    scal = jnp.stack([1.0 / jnp.asarray(t, jnp.float32),
+                      e.astype(jnp.float32),
+                      2.0 * jnp.asarray(C, jnp.float32)]).reshape(3, 1)
+    hv = _hinge.hinge_xd_raw(Xp2, d2d, y2d2, v2d2, scal, bn=bn_, bk=bk2,
+                             interpret=interp)
+    return hv[:n, 0].astype(v.dtype)
+
+
+@partial(jax.jit, static_argnames=("bp", "bk", "use_pallas", "interpret"))
+def hinge_stats(
+    X: jax.Array,
+    y: jax.Array,
+    t: jax.Array | float,
+    w: jax.Array,
+    C: jax.Array | float,
+    *,
+    bp: int = 512,
+    bk: int = 512,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+):
+    """Fused Newton outer-step stats: (margin (2p,), act (2p,), loss, galpha)."""
+    if not use_pallas:
+        return _ref.hinge_stats_ref(X, y, t, w, C)
+    from repro.kernels import hinge_stats as _hs
+    interp = _on_cpu() if interpret is None else interpret
+    n, p = X.shape
+    bp_ = min(bp, _next_mult(p))
+    bk_ = min(bk, _next_mult(n))
+    Xp = _pad_to(_pad_to(X, 0, bk_), 1, bp_)
+    w2d = _pad_to(w[:, None], 0, bk_).astype(jnp.float32)
+    y2d = _pad_to(y[:, None], 0, bk_).astype(jnp.float32)
+    scal = jnp.stack([1.0 / jnp.asarray(t, jnp.float32),
+                      jnp.asarray(C, jnp.float32)]).reshape(2, 1)
+    mt, mb, gt, gb, lp = _hs.hinge_stats_raw(Xp, w2d, y2d, scal,
+                                             bp=bp_, bk=bk_, interpret=interp)
+    # padded feature columns produce margin 1-eps... no: padded cols give a=0,
+    # o=-+byw; slice them off before assembling
+    margin = jnp.concatenate([mt[:p, 0], mb[:p, 0]]).astype(w.dtype)
+    act = (margin < 1.0).astype(w.dtype)
+    galpha = jnp.concatenate([gt[:p, 0], gb[:p, 0]]).astype(w.dtype)
+    # loss partials include padded columns of the LAST block: recompute their
+    # contribution exactly by masking is cheap: padded cols have a=0 =>
+    # xi_top = act*(1-(-byw))... subtract analytically:
+    pad = (-p) % bp_
+    byw = (y @ w) / jnp.asarray(t, w.dtype)
+    xi_pad = jnp.maximum(1.0 + byw, 0.0)   # padded cols: a=0 => both halves
+    pad_loss = pad * jnp.asarray(C, jnp.float32) * 2.0 * xi_pad ** 2
+    loss = 0.5 * (w @ w) + jnp.sum(lp) - pad_loss
+    return margin, act, loss.astype(w.dtype), galpha
+
+
+def _next_mult(sz: int, base: int = 128) -> int:
+    """Largest power-of-two-ish tile not exceeding the padded size."""
+    m = base
+    while m > sz:
+        m //= 2
+    return max(m, 8)

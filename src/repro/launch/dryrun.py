@@ -1,0 +1,421 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+# Only this module forces 512 host devices; tests/benches see the real 1.
+
+"""Multi-pod dry-run: for every (architecture x input shape x mesh) cell,
+AOT-lower + compile the step function on the production mesh and record
+memory_analysis / cost_analysis / per-collective byte counts to
+experiments/artifacts/<cell>.json (resumable; roofline.py consumes these).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+        --mesh single --out experiments/artifacts
+
+Cells:
+  train_4k    -> train_step  (fwd+bwd+AdamW, microbatched, remat, ZeRO-1)
+  prefill_32k -> prefill_step (logits + KV cache build)
+  decode_32k / long_500k -> serve decode_step (1 token vs seq_len cache)
+  sven_*      -> the paper's distributed solver hot ops (gram / hessian-mv)
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import dist
+from repro.configs import ARCHS, SHAPES, get_config, get_meta, input_specs
+from repro.dist.shardings import (batch_shardings, cache_shardings,
+                                  params_shardings, replicated)
+from repro.dist.zero import zero1_shardings
+from repro.launch.mesh import make_production_mesh, mesh_chip_count
+from repro.models import model as M
+from repro.optim.adamw import AdamWState
+from repro.serve.engine import make_decode_step, make_prefill_step
+from repro.train.step import make_train_step
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|c64|c128)\[([0-9,]*)\]")
+
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes per collective kind over the optimized HLO.
+
+    Handles tuple-result ops (XLA's reduction combiner merges many psums into
+    one `(...) all-reduce(...)`) and async start/done pairs (counts -start,
+    skips -done)."""
+    out: dict = {}
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        rhs = line.split("=", 1)[1]
+        for kind in _COLL_KINDS:
+            pos = -1
+            for tok in (f" {kind}(", f" {kind}-start("):
+                pos = rhs.find(tok)
+                if pos != -1:
+                    break
+            if pos == -1:
+                continue
+            nbytes = 0
+            for dt, dims in _SHAPE_RE.findall(rhs[:pos]):
+                n = 1
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+                nbytes += n * _DTYPE_BYTES[dt]
+            e = out.setdefault(kind, {"count": 0, "bytes": 0})
+            e["count"] += 1
+            e["bytes"] += nbytes
+            break
+    return out
+
+
+def analyze(compiled, lower_s: float, compile_s: float) -> dict:
+    rec = {"lower_s": round(lower_s, 2), "compile_s": round(compile_s, 2)}
+    try:
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+        rec["flops"] = float(ca.get("flops", -1))
+        rec["bytes_accessed"] = float(ca.get("bytes accessed", -1))
+        rec["transcendentals"] = float(ca.get("transcendentals", -1))
+    except Exception as e:  # noqa: BLE001
+        rec["cost_analysis_error"] = str(e)
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            rec[k] = int(getattr(ma, k))
+        rec["peak_bytes_per_device"] = (
+            rec["argument_size_in_bytes"] + rec["output_size_in_bytes"]
+            + rec["temp_size_in_bytes"] - rec.get("alias_size_in_bytes", 0))
+    except Exception as e:  # noqa: BLE001
+        rec["memory_analysis_error"] = str(e)
+    try:
+        rec["collectives"] = collective_bytes(compiled.as_text())
+    except Exception as e:  # noqa: BLE001
+        rec["collectives_error"] = str(e)
+    return rec
+
+
+def _combine_probes(rec: dict, recA: dict, recB: dict, n_periods: int, mb: int):
+    """XLA's cost model counts while/scan bodies ONCE, so a scanned L-layer
+    model under-reports by ~L/period x. Correction: lower 1-period and
+    2-period probes (at microbatch scale), diff to get per-period cost, then
+    total = mb * (A + (n_periods - 1) * per_period). Slight overcount of the
+    optimizer epilogue (x mb, elementwise, <1-2% of flops) — documented in
+    EXPERIMENTS.md. The probes share the real cell's shapes per microbatch."""
+
+    def corr(field):
+        a, b = recA.get(field), recB.get(field)
+        if a is None or b is None or a < 0 or b < 0:
+            return None
+        pp = b - a
+        return mb * (a + (n_periods - 1) * pp)
+
+    rec["corrected_flops"] = corr("flops")
+    rec["corrected_bytes"] = corr("bytes_accessed")
+    colls = {}
+    ka = recA.get("collectives", {})
+    kb = recB.get("collectives", {})
+    for kind in set(ka) | set(kb):
+        ca = ka.get(kind, {"count": 0, "bytes": 0})
+        cb = kb.get(kind, {"count": 0, "bytes": 0})
+        colls[kind] = {
+            "count": mb * (ca["count"] + (n_periods - 1) * (cb["count"] - ca["count"])),
+            "bytes": mb * (ca["bytes"] + (n_periods - 1) * (cb["bytes"] - ca["bytes"])),
+        }
+    rec["corrected_collectives"] = colls
+    rec["probe_A"] = {k: recA.get(k) for k in ("flops", "bytes_accessed", "collectives")}
+    rec["probe_B"] = {k: recB.get(k) for k in ("flops", "bytes_accessed", "collectives")}
+
+
+def _rules_for(cfg, shape_name: str) -> dict:
+    rules = dict(dist.DEFAULT_RULES)
+    rules.update(cfg.rules_override)
+    if shape_name == "prefill_32k":
+        # cache written seq-sharded over model; compute stays heads-sharded
+        rules["seq_kv"] = "model"
+        rules["kv_heads"] = None
+    if shape_name == "decode_32k":
+        # flash-decoding layout: batch over data, cache seq over model, heads
+        # UNSHARDED in compute (a heads-sharded q against a seq-sharded cache
+        # makes GSPMD replicate the cache — involuntary full remat). Weights
+        # take FSDP over data instead of head-TP.
+        rules["seq_kv"] = "model"
+        rules["kv_heads"] = None
+        rules["heads"] = None
+        rules["fsdp"] = "data"
+    if shape_name == "long_500k":
+        # batch=1: seq shards over DATA, heads keep model TP — disjoint axes,
+        # so scores (B, H@model, 1, S@data) compose without resharding.
+        rules["batch"] = None
+        rules["seq_kv"] = "data"
+        rules["kv_heads"] = None
+        rules["fsdp"] = None
+    return rules
+
+
+def _lower_one(cfg, shape_name: str, mesh, rules, *, microbatches: int,
+               global_batch: int | None = None) -> dict:
+    """Lower + compile one step artifact for `cfg` at a shape; returns analysis."""
+    sh = dict(SHAPES[shape_name])
+    if global_batch is not None:
+        sh["global_batch"] = global_batch
+
+    with dist.mesh_context(mesh, rules=rules):
+        import repro.configs as C
+        saved = C.SHAPES[shape_name]
+        C.SHAPES[shape_name] = sh
+        try:
+            specs = input_specs(cfg, shape_name)
+        finally:
+            C.SHAPES[shape_name] = saved
+        params_shape = jax.eval_shape(lambda: M.init_model(jax.random.PRNGKey(0), cfg))
+        p_sh = params_shardings(params_shape)
+        t0 = time.perf_counter()
+
+        if sh["kind"] == "train":
+            step_fn = make_train_step(cfg, microbatches=microbatches, learning_rate=1e-3,
+                                      grad_shardings=p_sh)
+            opt_shape = jax.eval_shape(partial_adamw_init, params_shape)
+            m_sh = zero1_shardings(p_sh, params_shape)
+            o_sh = AdamWState(m=m_sh, v=m_sh, count=replicated(opt_shape.count))
+            b_sh = batch_shardings(specs)
+            jf = jax.jit(step_fn,
+                         in_shardings=(p_sh, o_sh, b_sh),
+                         donate_argnums=(0, 1))
+            lowered = jf.lower(params_shape, opt_shape, specs)
+        elif sh["kind"] == "prefill":
+            step_fn = make_prefill_step(cfg, max_len=sh["seq_len"])
+            b_sh = batch_shardings(specs)
+            jf = jax.jit(step_fn, in_shardings=(p_sh, b_sh))
+            lowered = jf.lower(params_shape, specs)
+        else:  # decode
+            B, S = sh["global_batch"], sh["seq_len"]
+            cache_shape = jax.eval_shape(
+                lambda: M.init_cache(None, cfg, B, S))
+            c_sh = cache_shardings(cache_shape)
+            step_fn = make_decode_step(cfg)
+            tok_sh = batch_shardings(specs)["tokens"]
+            jf = jax.jit(step_fn, in_shardings=(p_sh, tok_sh, c_sh),
+                         out_shardings=None, donate_argnums=(2,))
+            lowered = jf.lower(params_shape, specs["tokens"], cache_shape)
+
+        lower_s = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        return analyze(compiled, lower_s, time.perf_counter() - t1)
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, opt_overrides: dict | None = None,
+               probes: bool = True) -> dict:
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if opt_overrides:
+        cfg = _dc.replace(cfg, **opt_overrides.get("cfg", {}))
+    meta = get_meta(arch)
+    sh = SHAPES[shape_name]
+    rules = _rules_for(cfg, shape_name)
+    if opt_overrides:
+        rules.update(opt_overrides.get("rules", {}))
+    mb = (opt_overrides or {}).get("microbatches", meta.train_microbatch) \
+        if sh["kind"] == "train" else 1
+
+    rec = _lower_one(cfg, shape_name, mesh, rules, microbatches=mb)
+    rec.update(arch=arch, shape=shape_name,
+               mesh={k: v for k, v in mesh.shape.items()},
+               chips=mesh_chip_count(mesh), kind=sh["kind"],
+               microbatches=mb, n_periods=cfg.n_periods, period=cfg.period)
+
+    if probes:
+        # scan-count correction probes: 1 and 2 periods, UNROLLED (cost
+        # analysis counts lax.scan bodies once), at microbatch scale
+        try:
+            probe_recs = []
+            for k in (1, 2):
+                cfg_k = _dc.replace(cfg, n_layers=cfg.dense_prefix + k * cfg.period,
+                                    unroll_layers=True)
+                gb = sh["global_batch"] // mb if sh["kind"] == "train" else None
+                probe_recs.append(_lower_one(cfg_k, shape_name, mesh, rules,
+                                             microbatches=1, global_batch=gb))
+            _combine_probes(rec, probe_recs[0], probe_recs[1], cfg.n_periods, mb)
+        except Exception as e:  # noqa: BLE001
+            rec["probe_error"] = str(e)
+    return rec
+
+
+def partial_adamw_init(params_shape):
+    from repro.optim.adamw import adamw_init
+    return adamw_init(params_shape)
+
+
+# ------------------------------------------------------------- sven cells ---
+
+def lower_sven_cell(which: str, mesh, variant: str = "blocks") -> dict:
+    """The paper's own distributed hot ops at genetics scale.
+
+    variant (gram cell only): "blocks" (optimized block identity),
+    "paper" (materialized Zhat, the MATLAB-faithful baseline),
+    "blocks_bf16" (bf16 inputs, f32 accumulation)."""
+    from repro.core.distributed import (distributed_gram, distributed_gram_paper,
+                                        make_distributed_hessian_matvec,
+                                        feature_sharding)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    axes = tuple(mesh.axis_names)
+    if which == "sven_gram_nggp":           # n >> p dual: K build
+        n, p = 1 << 20, 8192
+        dtype = jnp.bfloat16 if variant == "blocks_bf16" else jnp.float32
+        X = jax.ShapeDtypeStruct((n, p), dtype)
+        y = jax.ShapeDtypeStruct((n,), dtype)
+        x_sh = NamedSharding(mesh, P(axes, None))
+        y_sh = NamedSharding(mesh, P(axes))
+        if variant == "paper":
+            fn = jax.jit(lambda X, y: distributed_gram_paper(mesh, X, y, 1.5),
+                         in_shardings=(x_sh, y_sh))
+        else:
+            fn = jax.jit(lambda X, y: distributed_gram(mesh, X, y, 1.5),
+                         in_shardings=(x_sh, y_sh))
+        t0 = time.perf_counter()
+        lowered = fn.lower(X, y)
+        lower_s = time.perf_counter() - t0
+    elif which == "sven_hess_pggn":         # p >> n primal: CG hot loop
+        n, p = 4096, 1 << 20
+        X = jax.ShapeDtypeStruct((n, p), jnp.float32)
+        y = jax.ShapeDtypeStruct((n,), jnp.float32)
+        act = jax.ShapeDtypeStruct((2 * p,), jnp.float32)
+        v = jax.ShapeDtypeStruct((n,), jnp.float32)
+        x_sh = NamedSharding(mesh, P(None, axes))
+        rep = NamedSharding(mesh, P())
+
+        def hv(Xa, ya, acta, va):
+            f = make_distributed_hessian_matvec(mesh, Xa, ya, 1.5, 10.0)
+            return f(va, acta)
+
+        fn = jax.jit(hv, in_shardings=(x_sh, rep, rep, rep))
+        t0 = time.perf_counter()
+        lowered = fn.lower(X, y, act, v)
+        lower_s = time.perf_counter() - t0
+    else:
+        raise ValueError(which)
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    rec = analyze(compiled, lower_s, time.perf_counter() - t1)
+    rec.update(arch=which, shape="paper", kind="sven",
+               mesh={k: v for k, v in mesh.shape.items()},
+               chips=mesh_chip_count(mesh))
+    return rec
+
+
+SVEN_CELLS = ["sven_gram_nggp", "sven_hess_pggn"]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/artifacts")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--include-sven", action="store_true")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = ARCHS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    results = []
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        mesh_tag = "pod2x16x16" if multi else "pod16x16"
+        for arch in archs:
+            if arch in SVEN_CELLS:
+                cells = [(arch, "paper")]
+            else:
+                cells = [(arch, s) for s in shapes]
+            for a, s in cells:
+                if s == "long_500k" and a not in SVEN_CELLS and not get_meta(a).long_500k:
+                    rec = {"arch": a, "shape": s, "mesh_tag": mesh_tag,
+                           "status": "skipped",
+                           "reason": get_meta(a).long_500k_note}
+                    _write(args.out, a, s, mesh_tag, rec)
+                    print(f"[dryrun] SKIP {a} x {s} ({mesh_tag})", flush=True)
+                    continue
+                path = _path(args.out, a, s, mesh_tag)
+                if os.path.exists(path) and not args.force:
+                    try:
+                        cached = json.load(open(path))
+                    except Exception:  # noqa: BLE001
+                        cached = {"status": "error"}
+                    if cached.get("status") != "error":
+                        print(f"[dryrun] cached {a} x {s} ({mesh_tag})", flush=True)
+                        continue
+                print(f"[dryrun] lowering {a} x {s} ({mesh_tag}) ...", flush=True)
+                try:
+                    if a in SVEN_CELLS:
+                        rec = lower_sven_cell(a, mesh)
+                    else:
+                        rec = lower_cell(a, s, mesh)
+                    rec["status"] = "ok"
+                    rec["mesh_tag"] = mesh_tag
+                    print(f"[dryrun] OK {a} x {s} ({mesh_tag}): "
+                          f"flops={rec.get('flops', -1):.3e} "
+                          f"peak={rec.get('peak_bytes_per_device', -1) / 2**30:.2f}GiB "
+                          f"compile={rec.get('compile_s')}s", flush=True)
+                except Exception as e:  # noqa: BLE001
+                    rec = {"arch": a, "shape": s, "mesh_tag": mesh_tag,
+                           "status": "error", "error": str(e),
+                           "traceback": traceback.format_exc()[-4000:]}
+                    print(f"[dryrun] FAIL {a} x {s} ({mesh_tag}): {e}", flush=True)
+                _write(args.out, a, s, mesh_tag, rec)
+                results.append(rec)
+        if args.include_sven and args.arch == "all":
+            for cell in SVEN_CELLS:
+                path = _path(args.out, cell, "paper", mesh_tag)
+                if os.path.exists(path) and not args.force:
+                    continue
+                print(f"[dryrun] lowering {cell} ({mesh_tag}) ...", flush=True)
+                try:
+                    rec = lower_sven_cell(cell, mesh)
+                    rec["status"] = "ok"
+                    rec["mesh_tag"] = mesh_tag
+                except Exception as e:  # noqa: BLE001
+                    rec = {"arch": cell, "shape": "paper", "mesh_tag": mesh_tag,
+                           "status": "error", "error": str(e),
+                           "traceback": traceback.format_exc()[-4000:]}
+                    print(f"[dryrun] FAIL {cell}: {e}", flush=True)
+                _write(args.out, cell, "paper", mesh_tag, rec)
+    n_err = sum(1 for r in results if r.get("status") == "error")
+    print(f"[dryrun] finished: {len(results)} lowered, {n_err} errors", flush=True)
+    return 1 if n_err else 0
+
+
+def _path(out, arch, shape, mesh_tag):
+    return os.path.join(out, f"{arch}__{shape}__{mesh_tag}.json")
+
+
+def _write(out, arch, shape, mesh_tag, rec):
+    with open(_path(out, arch, shape, mesh_tag), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

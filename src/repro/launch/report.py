@@ -1,0 +1,75 @@
+"""Render EXPERIMENTS.md tables from the dry-run artifacts.
+
+    PYTHONPATH=src python -m repro.launch.report [--out experiments/artifacts]
+prints markdown tables for §Dry-run and §Roofline.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.launch.roofline import build_table, load_all
+
+
+def _f(v, fmt="{:.3g}"):
+    return fmt.format(v) if isinstance(v, (int, float)) else (v or "")
+
+
+def dryrun_table(out_dir: str, mesh_tag: str) -> str:
+    lines = ["| arch | shape | flops/dev (corr) | bytes/dev (corr) | peak GiB/dev | "
+             "collective bytes/dev | compile s |",
+             "|---|---|---|---|---|---|---|"]
+    for rec in load_all(out_dir):
+        if rec.get("mesh_tag") != mesh_tag:
+            continue
+        if rec.get("status") == "skipped":
+            lines.append(f"| {rec['arch']} | {rec['shape']} | SKIP | | | | |")
+            continue
+        if rec.get("status") != "ok":
+            lines.append(f"| {rec['arch']} | {rec['shape']} | ERROR | | | | |")
+            continue
+        coll = rec.get("corrected_collectives") or rec.get("collectives") or {}
+        cb = sum(e["bytes"] for e in coll.values())
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} "
+            f"| {_f(rec.get('corrected_flops') or rec.get('flops'), '{:.3e}')} "
+            f"| {_f(rec.get('corrected_bytes') or rec.get('bytes_accessed'), '{:.3e}')} "
+            f"| {_f((rec.get('peak_bytes_per_device') or 0) / 2**30, '{:.2f}')} "
+            f"| {_f(cb, '{:.3e}')} | {_f(rec.get('compile_s'), '{:.1f}')} |")
+    return "\n".join(lines)
+
+
+def roofline_table(out_dir: str, mesh_tag: str) -> str:
+    lines = ["| arch | shape | t_comp s | t_mem s | t_coll s | bottleneck | "
+             "useful (6ND/HLO) | MFU@roofline | fits 16G |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for row in build_table(out_dir):
+        if row.get("mesh") != mesh_tag:
+            continue
+        if row["status"] == "skipped":
+            lines.append(f"| {row['arch']} | {row['shape']} | SKIP | | | | | | |")
+            continue
+        if row["status"] != "ok":
+            lines.append(f"| {row['arch']} | {row['shape']} | ERR | | | | | | |")
+            continue
+        fits = "yes" if row.get("peak_gib", 1e9) <= 16 else f"NO ({row['peak_gib']:.0f}G)"
+        lines.append(
+            f"| {row['arch']} | {row['shape']} | {_f(row.get('t_compute_s'), '{:.2e}')} "
+            f"| {_f(row.get('t_memory_s'), '{:.2e}')} | {_f(row.get('t_collective_s'), '{:.2e}')} "
+            f"| {row.get('bottleneck', '')} | {_f(row.get('useful_ratio'), '{:.2f}')} "
+            f"| {_f(row.get('mfu_at_roofline'), '{:.2f}')} | {fits} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/artifacts")
+    ap.add_argument("--mesh", default="pod16x16")
+    args = ap.parse_args()
+    print("## Dry-run (" + args.mesh + ")\n")
+    print(dryrun_table(args.out, args.mesh))
+    print("\n## Roofline (" + args.mesh + ")\n")
+    print(roofline_table(args.out, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,166 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+TPU v5e constants (per chip): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI. Terms per (arch x shape x mesh) cell, from the corrected (scan-aware)
+dry-run numbers — all "per device" quantities:
+
+    t_compute = flops_dev / 197e12
+    t_memory  = bytes_dev / 819e9
+    t_coll    = sum_k  wire_bytes_k(dev) * hops_factor_k / 50e9
+
+Collective wire-byte models (ring algorithms, result-shape R bytes recorded
+by the dry-run's HLO scan, already per-device):
+    all-gather:        R * (n-1)/n   (R = gathered result)
+    reduce-scatter:    R * (n-1)     (R = scattered result; input n*R)
+    all-reduce:        2R * (n-1)/n
+    all-to-all:        R * (n-1)/n
+    collective-permute R
+
+MODEL_FLOPS = 6 * N_active * tokens (train; 3x for fwd-only cells x2... see
+`model_flops`) — the useful-work yardstick; MODEL_FLOPS / HLO_FLOPS exposes
+remat/padding/dispatch waste.
+
+    PYTHONPATH=src python -m repro.launch.roofline --out experiments/artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # B/s / chip
+ICI_BW = 50e9              # B/s / link
+
+_WIRE_FACTOR = {
+    "all-gather": lambda n: (n - 1) / n,
+    "reduce-scatter": lambda n: (n - 1),
+    "all-reduce": lambda n: 2 * (n - 1) / n,
+    "all-to-all": lambda n: (n - 1) / n,
+    "collective-permute": lambda n: 1.0,
+}
+
+
+def model_flops(arch_meta, shape: dict, kind: str) -> float:
+    """6*N_active*D for train, 2*N_active*D for single forward (prefill),
+    2*N_active*B for one decode token (D = tokens processed)."""
+    n_act = arch_meta.active_params_b * 1e9
+    if kind == "train":
+        tokens = shape["global_batch"] * shape["seq_len"]
+        return 6 * n_act * tokens
+    if kind == "prefill":
+        tokens = shape["global_batch"] * shape["seq_len"]
+        return 2 * n_act * tokens
+    # decode: one token per sequence
+    return 2 * n_act * shape["global_batch"]
+
+
+def roofline_terms(rec: dict, *, mesh_axis_for_coll: str = "model") -> dict:
+    chips = rec["chips"]
+    flops_dev = rec.get("corrected_flops") or rec.get("flops")
+    bytes_dev = rec.get("corrected_bytes") or rec.get("bytes_accessed")
+    colls = rec.get("corrected_collectives") or rec.get("collectives") or {}
+    # collective ring size: LM cells collect along the model axis (16); the
+    # sven cells' shard_map collectives span the FLAT mesh (all chips)
+    if rec.get("kind") == "sven":
+        n_ring = chips
+    else:
+        n_ring = rec.get("mesh", {}).get(mesh_axis_for_coll, 16)
+    t_comp = flops_dev / PEAK_FLOPS if flops_dev else None
+    t_mem = bytes_dev / HBM_BW if bytes_dev else None
+    t_coll = 0.0
+    coll_bytes = 0
+    for kind, e in colls.items():
+        f = _WIRE_FACTOR.get(kind, lambda n: 1.0)(n_ring)
+        t_coll += e["bytes"] * f / ICI_BW
+        coll_bytes += e["bytes"]
+    out = {
+        "t_compute_s": t_comp,
+        "t_memory_s": t_mem,
+        "t_collective_s": t_coll,
+        "collective_bytes_dev": coll_bytes,
+    }
+    terms = {k: v for k, v in out.items() if k.startswith("t_") and v}
+    if terms:
+        dom = max(terms, key=lambda k: terms[k])
+        out["bottleneck"] = dom.replace("t_", "").replace("_s", "")
+        t_bound = max(terms.values())
+        out["roofline_step_s"] = t_bound
+        if t_comp:
+            out["compute_fraction"] = t_comp / t_bound
+    return out
+
+
+def load_all(out_dir: str) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def build_table(out_dir: str) -> list[dict]:
+    from repro.configs import SHAPES, get_meta
+    rows = []
+    for rec in load_all(out_dir):
+        if rec.get("status") == "skipped":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": rec.get("mesh_tag"), "status": "skipped",
+                         "note": rec.get("reason", "")})
+            continue
+        if rec.get("status") != "ok":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": rec.get("mesh_tag"), "status": "error",
+                         "note": rec.get("error", "")[:200]})
+            continue
+        row = {"arch": rec["arch"], "shape": rec["shape"],
+               "mesh": rec.get("mesh_tag"), "status": "ok",
+               "chips": rec["chips"],
+               "peak_gib": (rec.get("peak_bytes_per_device") or 0) / 2**30}
+        row.update(roofline_terms(rec))
+        if rec["shape"] in SHAPES and rec.get("kind") != "sven":
+            try:
+                meta = get_meta(rec["arch"])
+                mf = model_flops(meta, SHAPES[rec["shape"]], rec["kind"])
+                mf_dev = mf / rec["chips"]
+                row["model_flops_dev"] = mf_dev
+                hlo = rec.get("corrected_flops") or rec.get("flops")
+                if hlo:
+                    row["useful_ratio"] = mf_dev / hlo
+                    row["mfu_at_roofline"] = (mf_dev / PEAK_FLOPS) / row["roofline_step_s"]
+            except Exception:  # noqa: BLE001
+                pass
+        rows.append(row)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/artifacts")
+    ap.add_argument("--csv", default="")
+    args = ap.parse_args()
+    rows = build_table(args.out)
+    cols = ["arch", "shape", "mesh", "status", "t_compute_s", "t_memory_s",
+            "t_collective_s", "bottleneck", "compute_fraction", "useful_ratio",
+            "mfu_at_roofline", "peak_gib"]
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(_fmt(r.get(c)) for c in cols))
+    if args.csv:
+        with open(args.csv, "w") as f:
+            f.write(",".join(cols) + "\n")
+            for r in rows:
+                f.write(",".join(_fmt(r.get(c)) for c in cols) + "\n")
+
+
+def _fmt(v):
+    if v is None:
+        return ""
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,249 @@
+"""GQA attention (optional QKV bias, sliding window) with train / prefill /
+decode paths and a KV cache (rolling buffer under SWA).
+
+Sharding: heads on the TP ("model") axis; KV cache layout is config-driven:
+"heads" (default) or "seq" (split-KV decode for long contexts, SP-style)."""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import constrain
+from repro.models.layers import apply_rope, rope_freqs
+
+
+class KVCache(NamedTuple):
+    k: jax.Array      # (B, S_buf, kv_heads, head_dim) — roped keys
+    v: jax.Array      # (B, S_buf, kv_heads, head_dim)
+    pos: jax.Array    # () int32: number of tokens already written
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, dtype, qkv_bias: bool = False) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = d_model ** -0.5
+    p = {
+        "wq": jax.random.normal(kq, (d_model, n_heads, head_dim), dtype) * s,
+        "wk": jax.random.normal(kk, (d_model, n_kv_heads, head_dim), dtype) * s,
+        "wv": jax.random.normal(kv, (d_model, n_kv_heads, head_dim), dtype) * s,
+        "wo": jax.random.normal(ko, (n_heads, head_dim, d_model), dtype) * (n_heads * head_dim) ** -0.5,
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads, head_dim), dtype)
+        p["bk"] = jnp.zeros((n_kv_heads, head_dim), dtype)
+        p["bv"] = jnp.zeros((n_kv_heads, head_dim), dtype)
+    return p
+
+
+def attention_sharding(qkv_bias: bool = False) -> dict:
+    s = {
+        "wq": ("embed", "heads", None),
+        "wk": ("embed", "kv_heads", None),
+        "wv": ("embed", "kv_heads", None),
+        "wo": ("heads", None, "embed"),
+    }
+    if qkv_bias:
+        s.update({"bq": ("heads", None), "bk": ("kv_heads", None), "bv": ("kv_heads", None)})
+    return s
+
+
+def _project_qkv(params: dict, x: jax.Array):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+    v = constrain(v, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def _repeat_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """(B,S,kv,dh) -> (B,S,H,dh) by repeating each kv head H/kv times."""
+    b, s, kv, dh = k.shape
+    rep = n_heads // kv
+    if rep == 1:
+        return k
+    return jnp.repeat(k, rep, axis=2)
+
+
+def _sdpa(q, k, v, mask, head_dim):
+    """q (B,Sq,H,dh), k/v (B,Sk,H,dh), mask (1|B, 1, Sq, Sk) bool."""
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * (head_dim ** -0.5)
+    scores = jnp.where(mask, scores, jnp.float32(-1e30))
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    return constrain(out, "batch", None, "heads", None)
+
+
+# Materialized-score SDPA is used below this many query positions; above it
+# we run the online-softmax (flash-style) chunked path.
+CHUNKED_THRESHOLD = 2048
+CHUNK_Q = 1024
+CHUNK_KV = 1024
+
+
+def sdpa_chunked(q, k, v, *, scale: float, window: Optional[int] = None,
+                 causal: bool = True,
+                 chunk_q: int = CHUNK_Q, chunk_kv: int = CHUNK_KV):
+    """Online-softmax attention: never materializes (Sq, Sk) scores.
+
+    q (B,Sq,H,dh_qk), k (B,Sk,H,dh_qk), v (B,Sk,H,dh_v). Double lax.scan over
+    query and KV chunks with running (m, l, o) accumulators — the standard
+    flash-attention recurrence in pure JAX (the TPU kernel itself is XLA's
+    job here; this bounds live memory to one (cq, ckv) score tile).
+    Assumes q positions == arange(Sq), k positions == arange(Sk) (self-attn).
+    """
+    B, Sq, H, Dk = q.shape
+    Sk = k.shape[1]
+    Dv = v.shape[-1]
+    cq = min(chunk_q, Sq)
+    ckv = min(chunk_kv, Sk)
+    assert Sq % cq == 0 and Sk % ckv == 0, (Sq, Sk, cq, ckv)
+    nq, nk = Sq // cq, Sk // ckv
+
+    qr = q.reshape(B, nq, cq, H, Dk)
+    kr = k.reshape(B, nk, ckv, H, Dk)
+    vr = v.reshape(B, nk, ckv, H, Dv)
+
+    def q_block(carry, qi):
+        q_c, iq = qi                                   # (B,cq,H,Dk), ()
+        q_pos = iq * cq + jnp.arange(cq)
+
+        def kv_block(acc, kvj):
+            m, l, o = acc
+            k_c, v_c, jk = kvj
+            k_pos = jk * ckv + jnp.arange(ckv)
+            s = jnp.einsum("bqhd,bkhd->bhqk", q_c, k_c).astype(jnp.float32) * scale
+            mask = jnp.ones((cq, ckv), bool)
+            if causal:
+                mask &= k_pos[None, :] <= q_pos[:, None]
+            if window is not None:
+                mask &= (q_pos[:, None] - k_pos[None, :]) < window
+            s = jnp.where(mask[None, None], s, jnp.float32(-1e30))
+            m_new = jnp.maximum(m, s.max(-1))          # (B,H,cq)
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p.sum(-1)
+            o_new = o * alpha[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(v_c.dtype), v_c).astype(jnp.float32)
+            return (m_new, l_new, o_new), None
+
+        m0 = jnp.full((B, H, cq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, H, cq), jnp.float32)
+        o0 = jnp.zeros((B, H, cq, Dv), jnp.float32)
+        (m, l, o), _ = jax.lax.scan(
+            kv_block, (m0, l0, o0),
+            (kr.transpose(1, 0, 2, 3, 4), vr.transpose(1, 0, 2, 3, 4), jnp.arange(nk)))
+        out_c = (o / jnp.maximum(l, 1e-30)[..., None]).transpose(0, 2, 1, 3)  # (B,cq,H,Dv)
+        return carry, out_c.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_block, None,
+                           (qr.transpose(1, 0, 2, 3, 4), jnp.arange(nq)))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, Dv)
+    return constrain(out, "batch", None, "heads", None)
+
+
+def attend_full(params: dict, x: jax.Array, *, n_heads: int, head_dim: int,
+                rope_theta: float, window: Optional[int] = None,
+                positions: Optional[jax.Array] = None,
+                dense_max: int = CHUNKED_THRESHOLD) -> jax.Array:
+    """Training / prefill self-attention over the whole sequence (causal)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(params, x)
+    if positions is None:
+        positions = jnp.arange(S)
+    cos, sin = rope_freqs(head_dim, rope_theta, positions)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    k = _repeat_kv(k, n_heads)
+    v = _repeat_kv(v, n_heads)
+    if S > dense_max:
+        out = sdpa_chunked(q, k, v, scale=head_dim ** -0.5, window=window)
+    else:
+        i = positions[:, None]
+        j = positions[None, :]
+        mask = j <= i
+        if window is not None:
+            mask &= (i - j) < window
+        out = _sdpa(q, k, v, mask[None, None], head_dim)
+    return jnp.einsum("bqhd,hdm->bqm", out, params["wo"])
+
+
+def prefill(params: dict, x: jax.Array, *, n_heads: int, head_dim: int,
+            rope_theta: float, window: Optional[int] = None,
+            cache_len: Optional[int] = None,
+            dense_max: int = CHUNKED_THRESHOLD) -> tuple[jax.Array, KVCache]:
+    """Full-sequence attention that also returns the KV cache (possibly a
+    rolling buffer of size `window` when SWA is active)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(params, x)
+    positions = jnp.arange(S)
+    cos, sin = rope_freqs(head_dim, rope_theta, positions)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    kf = _repeat_kv(k, n_heads)
+    vf = _repeat_kv(v, n_heads)
+    if S > dense_max:
+        out = sdpa_chunked(q, kf, vf, scale=head_dim ** -0.5, window=window)
+    else:
+        i = positions[:, None]
+        j = positions[None, :]
+        mask = j <= i
+        if window is not None:
+            mask &= (i - j) < window
+        out = _sdpa(q, kf, vf, mask[None, None], head_dim)
+    out = jnp.einsum("bqhd,hdm->bqm", out, params["wo"])
+
+    buf = cache_len if cache_len is not None else S
+    if window is not None:
+        buf = min(buf, window)
+    if buf >= S:
+        pad = buf - S
+        k_buf = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_buf = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    else:  # rolling buffer keeps the trailing `buf` positions at slot pos%buf
+        tail_k = k[:, S - buf:]
+        tail_v = v[:, S - buf:]
+        shift = S % buf
+        k_buf = jnp.roll(tail_k, shift, axis=1)
+        v_buf = jnp.roll(tail_v, shift, axis=1)
+    k_buf = constrain(k_buf, "batch", "seq_kv", "kv_heads", None)
+    v_buf = constrain(v_buf, "batch", "seq_kv", "kv_heads", None)
+    return out, KVCache(k=k_buf, v=v_buf, pos=jnp.asarray(S, jnp.int32))
+
+
+def decode_step(params: dict, x: jax.Array, cache: KVCache, *, n_heads: int,
+                head_dim: int, rope_theta: float,
+                window: Optional[int] = None) -> tuple[jax.Array, KVCache]:
+    """One-token decode: x (B, 1, d) against the cache."""
+    B, one, _ = x.shape
+    S_buf = cache.k.shape[1]
+    pos = cache.pos
+    q, k, v = _project_qkv(params, x)
+    cos, sin = rope_freqs(head_dim, rope_theta, pos[None])
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    slot = jnp.minimum(pos, S_buf - 1) if window is None else pos % S_buf
+    z = jnp.zeros((), slot.dtype)
+    k_new = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype), (z, slot, z, z))
+    v_new = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype), (z, slot, z, z))
+    k_new = constrain(k_new, "batch", "seq_kv", "kv_heads", None)
+    v_new = constrain(v_new, "batch", "seq_kv", "kv_heads", None)
+
+    idx = jnp.arange(S_buf)
+    if window is None:
+        valid = idx <= pos
+    else:
+        valid = jnp.where(pos >= S_buf, jnp.ones((S_buf,), bool), idx <= pos)
+    kf = _repeat_kv(k_new, n_heads)
+    vf = _repeat_kv(v_new, n_heads)
+    out = _sdpa(q, kf, vf, valid[None, None, None, :], head_dim)
+    out = jnp.einsum("bqhd,hdm->bqm", out, params["wo"])
+    return out, KVCache(k=k_new, v=v_new, pos=pos + 1)

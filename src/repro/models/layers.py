@@ -1,0 +1,80 @@
+"""Base layers: RMSNorm, RoPE, SwiGLU MLP, embeddings. Pure-function style:
+params are nested dicts, `init_*` builds them, `apply_*` consumes them."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import constrain
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(dtype) * scale.astype(dtype)
+
+
+def init_rms_norm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+# ------------------------------------------------------------------ RoPE ---
+
+def rope_freqs(head_dim: int, theta: float, positions: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """positions (...,) -> cos/sin tables (..., head_dim/2), f32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., hd/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., S, H, hd); cos/sin (S, hd/2) broadcast over batch/heads."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    x1, x2 = jnp.split(xf, 2, axis=-1)
+    c = cos[..., :, None, :]
+    s = sin[..., :, None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return out.astype(dtype)
+
+
+# ---------------------------------------------------------------- SwiGLU ---
+
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d_model ** -0.5
+    s_out = d_ff ** -0.5
+    return {
+        "w_gate": jax.random.normal(k1, (d_model, d_ff), dtype) * s_in,
+        "w_up": jax.random.normal(k2, (d_model, d_ff), dtype) * s_in,
+        "w_down": jax.random.normal(k3, (d_ff, d_model), dtype) * s_out,
+    }
+
+
+def apply_mlp(params: dict, x: jax.Array) -> jax.Array:
+    """SwiGLU: silu(x W_g) * (x W_u) W_d, Megatron col->row TP on d_ff."""
+    h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    h = constrain(h, "batch", None, "mlp")
+    return h @ params["w_down"]
+
+
+def mlp_sharding() -> dict:
+    return {"w_gate": ("embed", "mlp"), "w_up": ("embed", "mlp"), "w_down": ("mlp", "embed")}
+
+
+# ------------------------------------------------------------ embeddings ---
+
+def init_embedding(key, vocab: int, d_model: int, dtype) -> dict:
+    return {"table": jax.random.normal(key, (vocab, d_model), dtype) * (d_model ** -0.5)}
+
+
+def embed_tokens(params: dict, tokens: jax.Array) -> jax.Array:
+    out = jnp.take(params["table"], tokens, axis=0)
+    return constrain(out, "batch", None, "embed")
+
+
+def logits_from_embedding(params: dict, x: jax.Array) -> jax.Array:
+    """Tied output head: x (..., d) @ table^T -> (..., vocab), f32 logits."""
+    logits = x.astype(jnp.float32) @ params["table"].astype(jnp.float32).T
+    return constrain(logits, "batch", None, "vocab")

@@ -1,0 +1,157 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Train/prefill use the expanded form (per-head K/V decompressed from the
+latent). Decode uses the ABSORBED form: W_uk is folded into the query and
+W_uv into the output so attention runs directly against the compressed
+(c_kv, k_rope) cache — the cache is (kv_lora_rank + rope_dim) per token
+instead of 2*H*dh, the property that makes 32k/500k decode memory-light.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import constrain
+from repro.models.layers import apply_rope, rope_freqs, rms_norm, init_rms_norm
+
+
+class MLAConfig(NamedTuple):
+    n_heads: int = 128
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array    # (B, S, kv_lora_rank)
+    k_rope: jax.Array  # (B, S, rope_dim) — shared across heads, roped
+    pos: jax.Array
+
+
+def init_mla(key, d_model: int, cfg: MLAConfig, dtype) -> dict:
+    ks = jax.random.split(key, 8)
+    H, r_q, r_kv = cfg.n_heads, cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    s = d_model ** -0.5
+    return {
+        "w_dq": jax.random.normal(ks[0], (d_model, r_q), dtype) * s,
+        "q_norm": init_rms_norm(r_q, dtype),
+        "w_uq": jax.random.normal(ks[1], (r_q, H, dn + dr), dtype) * r_q ** -0.5,
+        "w_dkv": jax.random.normal(ks[2], (d_model, r_kv), dtype) * s,
+        "kv_norm": init_rms_norm(r_kv, dtype),
+        "w_kr": jax.random.normal(ks[3], (d_model, dr), dtype) * s,
+        "w_uk": jax.random.normal(ks[4], (r_kv, H, dn), dtype) * r_kv ** -0.5,
+        "w_uv": jax.random.normal(ks[5], (r_kv, H, dv), dtype) * r_kv ** -0.5,
+        "wo": jax.random.normal(ks[6], (H, dv, d_model), dtype) * (H * dv) ** -0.5,
+    }
+
+
+def mla_sharding(cfg: MLAConfig) -> dict:
+    return {
+        "w_dq": ("embed", None),
+        "q_norm": {"scale": (None,)},
+        "w_uq": ("latent", "heads", None),
+        "w_dkv": ("embed", None),
+        "kv_norm": {"scale": (None,)},
+        "w_kr": ("embed", None),
+        "w_uk": ("latent", "heads", None),
+        "w_uv": ("latent", "heads", None),
+        "wo": ("heads", None, "embed"),
+    }
+
+
+def _queries(params, x, cfg: MLAConfig, cos, sin):
+    cq = rms_norm(x @ params["w_dq"], params["q_norm"]["scale"])
+    q = jnp.einsum("bsr,rhk->bshk", cq, params["w_uq"])
+    q = constrain(q, "batch", None, "heads", None)
+    q_nope, q_rope = q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
+    q_rope = apply_rope(q_rope, cos, sin)
+    return q_nope, q_rope
+
+
+def _latents(params, x, cos, sin):
+    c_kv = rms_norm(x @ params["w_dkv"], params["kv_norm"]["scale"])
+    k_rope = apply_rope((x @ params["w_kr"])[:, :, None, :], cos, sin)[:, :, 0]
+    return c_kv, k_rope
+
+
+def mla_full(params: dict, x: jax.Array, cfg: MLAConfig, *, rope_theta: float,
+             dense_max: int = 2048) -> jax.Array:
+    """Expanded-form causal attention (train / prefill). The rope part is
+    folded into an effective head dim so the shared chunked-SDPA core applies:
+    q_eff = [q_nope ; q_rope], k_eff = [k_nope ; k_rope broadcast]."""
+    from repro.models.attention import CHUNKED_THRESHOLD, _sdpa, sdpa_chunked
+
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    pos = jnp.arange(S)
+    cos, sin = rope_freqs(cfg.qk_rope_dim, rope_theta, pos)
+    q_nope, q_rope = _queries(params, x, cfg, cos, sin)
+    c_kv, k_rope = _latents(params, x, cos, sin)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["w_uk"])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, params["w_uv"])
+    k_nope = constrain(k_nope, "batch", None, "heads", None)
+    v = constrain(v, "batch", None, "heads", None)
+
+    q_eff = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_eff = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                                      (B, S, H, cfg.qk_rope_dim))], axis=-1)
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    if S > dense_max:
+        out = sdpa_chunked(q_eff, k_eff, v, scale=scale)
+    else:
+        mask = (pos[None, :] <= pos[:, None])[None, None]
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q_eff, k_eff).astype(jnp.float32) * scale
+        scores = jnp.where(mask, scores, jnp.float32(-1e30))
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+        out = constrain(out, "batch", None, "heads", None)
+    return jnp.einsum("bqhd,hdm->bqm", out, params["wo"])
+
+
+def mla_prefill(params: dict, x: jax.Array, cfg: MLAConfig, *, rope_theta: float,
+                cache_len: int, dense_max: int = 2048) -> tuple[jax.Array, MLACache]:
+    B, S, _ = x.shape
+    out = mla_full(params, x, cfg, rope_theta=rope_theta, dense_max=dense_max)
+    pos = jnp.arange(S)
+    cos, sin = rope_freqs(cfg.qk_rope_dim, rope_theta, pos)
+    c_kv, k_rope = _latents(params, x, cos, sin)
+    pad = cache_len - S
+    c_kv = jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0)))
+    k_rope = jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0)))
+    c_kv = constrain(c_kv, "batch", "seq_kv", None)
+    k_rope = constrain(k_rope, "batch", "seq_kv", None)
+    return out, MLACache(c_kv=c_kv, k_rope=k_rope, pos=jnp.asarray(S, jnp.int32))
+
+
+def mla_decode_step(params: dict, x: jax.Array, cache: MLACache, cfg: MLAConfig,
+                    *, rope_theta: float) -> tuple[jax.Array, MLACache]:
+    """Absorbed-form one-token decode against the compressed cache."""
+    B = x.shape[0]
+    pos = cache.pos
+    cos, sin = rope_freqs(cfg.qk_rope_dim, rope_theta, pos[None])
+    q_nope, q_rope = _queries(params, x, cfg, cos, sin)      # (B,1,H,*)
+    c_new, kr_new = _latents(params, x, cos, sin)            # (B,1,r), (B,1,dr)
+    z = jnp.zeros((), pos.dtype)
+    c_kv = jax.lax.dynamic_update_slice(cache.c_kv, c_new.astype(cache.c_kv.dtype), (z, pos, z))
+    k_rope = jax.lax.dynamic_update_slice(cache.k_rope, kr_new.astype(cache.k_rope.dtype), (z, pos, z))
+    c_kv = constrain(c_kv, "batch", "seq_kv", None)
+    k_rope = constrain(k_rope, "batch", "seq_kv", None)
+
+    # absorb W_uk into q: q_abs (B,1,H,r) = q_nope @ W_uk^T per head
+    q_abs = jnp.einsum("bqhd,rhd->bqhr", q_nope, params["w_uk"])
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    scores = (jnp.einsum("bqhr,bkr->bhqk", q_abs, c_kv)
+              + jnp.einsum("bqhd,bkd->bhqk", q_rope, k_rope)).astype(jnp.float32) * scale
+    valid = jnp.arange(c_kv.shape[1]) <= pos
+    scores = jnp.where(valid[None, None, None, :], scores, jnp.float32(-1e30))
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    # attend in latent space, then absorb W_uv on the way out
+    lat = jnp.einsum("bhqk,bkr->bqhr", probs, c_kv)
+    out = jnp.einsum("bqhr,rhd->bqhd", lat, params["w_uv"])
+    out = constrain(out, "batch", None, "heads", None)
+    return jnp.einsum("bqhd,hdm->bqm", out, params["wo"]), MLACache(c_kv=c_kv, k_rope=k_rope, pos=pos + 1)

@@ -1,0 +1,412 @@
+"""TransformerLM assembly: heterogeneous layer plans (attn/mla/ssm mixers x
+dense/moe MLPs), scan-over-periods parameter stacking (compile hygiene: the
+HLO contains one period body regardless of depth), tied-embedding head,
+modality frontends, and train/prefill/decode entry points.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import constrain
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.mla import MLAConfig
+from repro.models.moe import MoEConfig
+from repro.models.ssm import SSMConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    rope_theta: float = 1e4
+    qkv_bias: bool = False
+    swa_window: Optional[int] = None
+    mixer_pattern: tuple = ("attn",)          # tiled over layers
+    mlp_pattern: tuple = ("dense",)
+    dense_prefix: int = 0                      # first k layers: dense MLP (d_ff_dense)
+    d_ff_dense: Optional[int] = None
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    mla: Optional[MLAConfig] = None
+    frontend: str = "tokens"                   # tokens | codebooks | patches
+    n_codebooks: int = 1
+    vision_tokens: int = 0                     # prepended patch embeddings (patches)
+    mtp_depth: int = 0                         # DeepSeek-V3 multi-token prediction
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.bfloat16
+    remat: bool = True                         # per-layer activation checkpointing
+    remat_policy: str = "full"                 # "full" | "dots" (save matmul outs)
+    attn_dense_max: int = 2048                 # S above this -> chunked (flash) SDPA
+    unroll_layers: bool = False                # python-loop instead of lax.scan
+    # (used by dry-run cost probes: XLA cost_analysis counts scan bodies once,
+    # unrolled probes recover true per-period flops/bytes/collectives)
+    rules_override: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def period(self) -> int:
+        return int(math.lcm(len(self.mixer_pattern), len(self.mlp_pattern)))
+
+    def layer_spec(self, i: int) -> tuple[str, str]:
+        mixer = self.mixer_pattern[i % len(self.mixer_pattern)]
+        mlp = self.mlp_pattern[i % len(self.mlp_pattern)]
+        if i < self.dense_prefix:
+            mlp = "dense"
+        return mixer, mlp
+
+    @property
+    def n_body(self) -> int:
+        return self.n_layers - self.dense_prefix
+
+    @property
+    def n_periods(self) -> int:
+        assert self.n_body % self.period == 0, (self.n_body, self.period)
+        return self.n_body // self.period
+
+
+# ------------------------------------------------------------------ init ---
+
+def _init_layer(key, cfg: ModelConfig, mixer: str, mlp: str) -> dict:
+    k1, k2 = jax.random.split(key)
+    p: dict = {"mixer_norm": L.init_rms_norm(cfg.d_model, cfg.param_dtype),
+               "mlp_norm": L.init_rms_norm(cfg.d_model, cfg.param_dtype)}
+    if mixer == "attn":
+        p["mixer"] = attn.init_attention(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                         cfg.head_dim, cfg.param_dtype, cfg.qkv_bias)
+    elif mixer == "mla":
+        p["mixer"] = mla_mod.init_mla(k1, cfg.d_model, cfg.mla, cfg.param_dtype)
+    elif mixer == "ssm":
+        p["mixer"] = ssm_mod.init_ssm(k1, cfg.d_model, cfg.ssm, cfg.param_dtype)
+    else:
+        raise ValueError(mixer)
+    if mlp == "dense":
+        d_ff = cfg.d_ff_dense or cfg.d_ff
+        p["mlp"] = L.init_mlp(k2, cfg.d_model, d_ff, cfg.param_dtype)
+    elif mlp == "moe":
+        p["mlp"] = moe_mod.init_moe(k2, cfg.d_model, cfg.moe, cfg.param_dtype)
+    elif mlp == "none":   # pure-SSM blocks (mamba2): mixer only, no MLP
+        p.pop("mlp_norm")
+    else:
+        raise ValueError(mlp)
+    return p
+
+
+def init_model(key, cfg: ModelConfig) -> dict:
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    params: dict = {
+        "embed": L.init_embedding(keys[0], cfg.vocab_size, cfg.d_model, cfg.param_dtype),
+        "final_norm": L.init_rms_norm(cfg.d_model, cfg.param_dtype),
+    }
+    if cfg.frontend == "codebooks" and cfg.n_codebooks > 1:
+        params["codebook_embeds"] = [
+            L.init_embedding(jax.random.fold_in(keys[1], c), cfg.vocab_size, cfg.d_model,
+                             cfg.param_dtype) for c in range(1, cfg.n_codebooks)]
+    params["prefix"] = [
+        _init_layer(keys[2 + i], cfg, *cfg.layer_spec(i)) for i in range(cfg.dense_prefix)]
+    # body: stack params across periods for each position-in-period
+    body = []
+    for j in range(cfg.period):
+        per_period = [
+            _init_layer(keys[2 + cfg.dense_prefix + r * cfg.period + j], cfg,
+                        *cfg.layer_spec(cfg.dense_prefix + j))
+            for r in range(cfg.n_periods)]
+        body.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_period))
+    params["body"] = body
+    if cfg.mtp_depth:
+        k_mtp = jax.random.fold_in(keys[-1], 99)
+        params["mtp"] = {
+            "proj": jax.random.normal(k_mtp, (2 * cfg.d_model, cfg.d_model),
+                                      cfg.param_dtype) * (2 * cfg.d_model) ** -0.5,
+            "layer": _init_layer(jax.random.fold_in(k_mtp, 1), cfg, "attn", "dense"),
+            "norm": L.init_rms_norm(cfg.d_model, cfg.param_dtype),
+        }
+    return params
+
+
+# --------------------------------------------------------------- forward ---
+
+def _apply_mixer(p, x, cfg: ModelConfig, mixer: str):
+    if mixer == "attn":
+        return attn.attend_full(p, x, n_heads=cfg.n_heads, head_dim=cfg.head_dim,
+                                rope_theta=cfg.rope_theta, window=cfg.swa_window,
+                                dense_max=cfg.attn_dense_max)
+    if mixer == "mla":
+        return mla_mod.mla_full(p, x, cfg.mla, rope_theta=cfg.rope_theta,
+                                dense_max=cfg.attn_dense_max)
+    if mixer == "ssm":
+        return ssm_mod.ssm_forward(p, x, cfg.d_model, cfg.ssm)
+    raise ValueError(mixer)
+
+
+def _apply_layer(p, x, cfg: ModelConfig, mixer: str, mlp: str):
+    h = _apply_mixer(p["mixer"], L.rms_norm(x, p["mixer_norm"]["scale"]), cfg, mixer)
+    x = x + h
+    if mlp == "none":
+        return x, 0.0
+    hn = L.rms_norm(x, p["mlp_norm"]["scale"])
+    if mlp == "dense":
+        h2, aux = L.apply_mlp(p["mlp"], hn), 0.0
+    else:
+        h2, aux = moe_mod.apply_moe(p["mlp"], hn, cfg.moe)
+    return x + h2, aux
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch: dict) -> jax.Array:
+    if cfg.frontend == "tokens":
+        return L.embed_tokens(params["embed"], batch["tokens"])
+    if cfg.frontend == "codebooks":
+        toks = batch["tokens"]                    # (B, S, K)
+        x = L.embed_tokens(params["embed"], toks[..., 0])
+        for c in range(1, cfg.n_codebooks):
+            x = x + L.embed_tokens(params["codebook_embeds"][c - 1], toks[..., c])
+        return x
+    if cfg.frontend == "patches":
+        x_txt = L.embed_tokens(params["embed"], batch["tokens"])   # (B, S_txt, d)
+        x_img = batch["patch_embeds"].astype(x_txt.dtype)          # (B, P, d)
+        return jnp.concatenate([x_img, x_txt], axis=1)
+    raise ValueError(cfg.frontend)
+
+
+def forward(params: dict, cfg: ModelConfig, batch: dict, return_hidden: bool = False):
+    """Full-sequence forward -> (logits, aux_loss[, hidden]). Scan over periods."""
+    x = _embed_inputs(params, cfg, batch)
+    x = constrain(x, "batch", None, "embed")
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def apply_prefix_layer(p, x, i):
+        return _apply_layer(p, x, cfg, *cfg.layer_spec(i))
+
+    policy = (jax.checkpoint_policies.checkpoint_dots
+              if cfg.remat_policy == "dots" else None)
+    if cfg.remat:
+        apply_prefix_layer = jax.checkpoint(apply_prefix_layer, static_argnums=(2,),
+                                            policy=policy)
+    for i, p in enumerate(params["prefix"]):
+        x, aux = apply_prefix_layer(p, x, i)
+        aux_total = aux_total + aux
+
+    body = params["body"]
+    if cfg.n_periods > 0:
+        # Remat at the period boundary: backward saves only the (B,S,d) carry
+        # per scanned period, recomputing layer internals (attention tiles,
+        # MoE buffers) — THE memory policy that makes the big cells fit.
+        def period_body(carry, stacked):
+            x, aux_acc = carry
+            for j in range(cfg.period):
+                mixer, mlp = cfg.layer_spec(cfg.dense_prefix + j)
+                x, aux = _apply_layer(stacked[j], x, cfg, mixer, mlp)
+                aux_acc = aux_acc + aux
+            return (x, aux_acc), None
+
+        if cfg.remat:
+            period_body = jax.checkpoint(period_body, policy=policy)
+        if cfg.unroll_layers:
+            carry = (x, aux_total)
+            for r in range(cfg.n_periods):
+                stacked_r = jax.tree.map(lambda t: t[r], tuple(body))
+                carry, _ = period_body(carry, stacked_r)
+            x, aux_total = carry
+        else:
+            (x, aux_total), _ = jax.lax.scan(
+                period_body, (x, aux_total), tuple(body), length=cfg.n_periods)
+
+    x = L.rms_norm(x, params["final_norm"]["scale"])
+    logits = _head(params, cfg, x)
+    if return_hidden:
+        return logits, aux_total, x
+    return logits, aux_total
+
+
+def _head(params, cfg: ModelConfig, x):
+    if cfg.frontend == "codebooks":
+        tables = [params["embed"]["table"]] + [e["table"] for e in params.get("codebook_embeds", [])]
+        logits = jnp.stack([x.astype(jnp.float32) @ t.astype(jnp.float32).T for t in tables], axis=2)
+        return constrain(logits, "batch", None, None, "vocab")    # (B,S,K,V)
+    return L.logits_from_embedding(params["embed"], x)
+
+
+def mtp_logits(params: dict, cfg: ModelConfig, h: jax.Array, batch: dict):
+    """DeepSeek-V3 MTP depth-1: predict token t+2 from (h_t, emb(tok_{t+1}))."""
+    mtp = params["mtp"]
+    toks = batch["tokens"]
+    emb_next = L.embed_tokens(params["embed"], jnp.roll(toks, -1, axis=1))
+    z = jnp.concatenate([L.rms_norm(h, mtp["norm"]["scale"]), emb_next], axis=-1)
+    z = z @ mtp["proj"]
+    z, _ = _apply_layer(mtp["layer"], z, cfg, "attn", "dense")
+    return L.logits_from_embedding(params["embed"], z)
+
+
+# ------------------------------------------------------------- serve path ---
+
+def init_cache(params: dict, cfg: ModelConfig, batch_size: int, max_len: int):
+    """Allocate per-layer caches (layout mirrors prefix/body stacking)."""
+    def layer_cache(i, stacked: Optional[int]):
+        mixer, _ = cfg.layer_spec(i)
+        shape_pfx = (stacked,) if stacked else ()
+
+        def z(shape, dtype):
+            return jnp.zeros(shape_pfx + shape, dtype)
+
+        if mixer == "attn":
+            buf = min(max_len, cfg.swa_window) if cfg.swa_window else max_len
+            return attn.KVCache(
+                k=z((batch_size, buf, cfg.n_kv_heads, cfg.head_dim), cfg.dtype),
+                v=z((batch_size, buf, cfg.n_kv_heads, cfg.head_dim), cfg.dtype),
+                pos=jnp.zeros(shape_pfx, jnp.int32))
+        if mixer == "mla":
+            return mla_mod.MLACache(
+                c_kv=z((batch_size, max_len, cfg.mla.kv_lora_rank), cfg.dtype),
+                k_rope=z((batch_size, max_len, cfg.mla.qk_rope_dim), cfg.dtype),
+                pos=jnp.zeros(shape_pfx, jnp.int32))
+        if mixer == "ssm":
+            d_inner, H, conv_ch = ssm_mod._dims(cfg.d_model, cfg.ssm)
+            return ssm_mod.SSMCache(
+                conv=z((batch_size, cfg.ssm.d_conv - 1, conv_ch), cfg.dtype),
+                h=z((batch_size, H, cfg.ssm.d_state, cfg.ssm.head_dim), jnp.float32))
+        raise ValueError(mixer)
+
+    caches = {"prefix": [layer_cache(i, None) for i in range(cfg.dense_prefix)],
+              "body": [layer_cache(cfg.dense_prefix + j, cfg.n_periods)
+                       for j in range(cfg.period)]}
+    return caches
+
+
+def _mixer_step(p, x, cache, cfg: ModelConfig, mixer: str):
+    if mixer == "attn":
+        return attn.decode_step(p, x, cache, n_heads=cfg.n_heads, head_dim=cfg.head_dim,
+                                rope_theta=cfg.rope_theta, window=cfg.swa_window)
+    if mixer == "mla":
+        return mla_mod.mla_decode_step(p, x, cache, cfg.mla, rope_theta=cfg.rope_theta)
+    if mixer == "ssm":
+        return ssm_mod.ssm_decode_step(p, x, cache, cfg.d_model, cfg.ssm)
+    raise ValueError(mixer)
+
+
+def _layer_step(p, x, cache, cfg: ModelConfig, mixer: str, mlp: str):
+    h, cache = _mixer_step(p["mixer"], L.rms_norm(x, p["mixer_norm"]["scale"]), cache, cfg, mixer)
+    x = x + h
+    if mlp == "none":
+        return x, cache
+    hn = L.rms_norm(x, p["mlp_norm"]["scale"])
+    if mlp == "dense":
+        h2 = L.apply_mlp(p["mlp"], hn)
+    else:
+        h2, _ = moe_mod.apply_moe(p["mlp"], hn, cfg.moe)
+    return x + h2, cache
+
+
+def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array, caches: dict):
+    """One-token decode. tokens (B,) or (B,K) for codebooks -> logits, caches."""
+    if cfg.frontend == "codebooks":
+        x = _embed_inputs(params, cfg, {"tokens": tokens[:, None, :]})
+    else:  # "patches" decodes text tokens only (image is prefill-time)
+        x = L.embed_tokens(params["embed"], tokens[:, None])
+    new_prefix = []
+    for i, p in enumerate(params["prefix"]):
+        x, c = _layer_step(p, x, caches["prefix"][i], cfg, *cfg.layer_spec(i))
+        new_prefix.append(c)
+
+    new_body = list(caches["body"])
+    if cfg.n_periods > 0:
+        def period_body(x, stacked):
+            ps, cs = stacked
+            new_cs = []
+            for j in range(cfg.period):
+                mixer, mlp = cfg.layer_spec(cfg.dense_prefix + j)
+                x, c = _layer_step(ps[j], x, cs[j], cfg, mixer, mlp)
+                new_cs.append(c)
+            return x, tuple(new_cs)
+
+        if cfg.unroll_layers:
+            ys = []
+            for r in range(cfg.n_periods):
+                sl = jax.tree.map(lambda t: t[r],
+                                  (tuple(params["body"]), tuple(caches["body"])))
+                x, y_r = period_body(x, sl)
+                ys.append(y_r)
+            new_body = list(jax.tree.map(lambda *l: jnp.stack(l), *ys))
+        else:
+            x, new_body = jax.lax.scan(
+                period_body, x, (tuple(params["body"]), tuple(caches["body"])),
+                length=cfg.n_periods)
+            new_body = list(new_body)
+
+    x = L.rms_norm(x, params["final_norm"]["scale"])
+    logits = _head(params, cfg, x)
+    return logits[:, 0], {"prefix": new_prefix, "body": new_body}
+
+
+def prefill(params: dict, cfg: ModelConfig, batch: dict, max_len: int):
+    """Prefill: full forward + cache build. Layer-by-layer with cache outputs."""
+    x = _embed_inputs(params, cfg, batch)
+    x = constrain(x, "batch", None, "embed")
+    B = x.shape[0]
+
+    def layer_prefill(p, x, i):
+        mixer, mlp = cfg.layer_spec(i)
+        hn = L.rms_norm(x, p["mixer_norm"]["scale"])
+        if mixer == "attn":
+            buf = min(max_len, cfg.swa_window) if cfg.swa_window else max_len
+            h, c = attn.prefill(p["mixer"], hn, n_heads=cfg.n_heads, head_dim=cfg.head_dim,
+                                rope_theta=cfg.rope_theta, window=cfg.swa_window,
+                                cache_len=buf, dense_max=cfg.attn_dense_max)
+        elif mixer == "mla":
+            h, c = mla_mod.mla_prefill(p["mixer"], hn, cfg.mla,
+                                       rope_theta=cfg.rope_theta, cache_len=max_len,
+                                       dense_max=cfg.attn_dense_max)
+        else:
+            h, c = ssm_mod.ssm_forward(p["mixer"], hn, cfg.d_model, cfg.ssm, return_cache=True)
+        x = x + h
+        if mlp == "none":
+            return x, c
+        hn2 = L.rms_norm(x, p["mlp_norm"]["scale"])
+        if mlp == "dense":
+            h2 = L.apply_mlp(p["mlp"], hn2)
+        else:
+            h2, _ = moe_mod.apply_moe(p["mlp"], hn2, cfg.moe)
+        return x + h2, c
+
+    new_prefix = []
+    for i, p in enumerate(params["prefix"]):
+        x, c = layer_prefill(p, x, i)
+        new_prefix.append(c)
+
+    new_body = []
+    if cfg.n_periods > 0:
+        def period_body(x, ps):
+            cs = []
+            for j in range(cfg.period):
+                x, c = layer_prefill(ps[j], x, cfg.dense_prefix + j)
+                cs.append(c)
+            return x, tuple(cs)
+
+        if cfg.unroll_layers:
+            ys = []
+            for r in range(cfg.n_periods):
+                sl = jax.tree.map(lambda t: t[r], tuple(params["body"]))
+                x, y_r = period_body(x, sl)
+                ys.append(y_r)
+            new_body = list(jax.tree.map(lambda *l: jnp.stack(l), *ys))
+        else:
+            x, body_caches = jax.lax.scan(period_body, x, tuple(params["body"]),
+                                          length=cfg.n_periods)
+            new_body = list(body_caches)
+
+    x = L.rms_norm(x, params["final_norm"]["scale"])
+    logits = _head(params, cfg, x)
+    return logits, {"prefix": new_prefix, "body": new_body}

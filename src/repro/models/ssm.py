@@ -1,0 +1,195 @@
+"""Mamba-2 SSD (state-space duality) block: chunked quadratic-within-chunk /
+recurrent-across-chunks training form + O(1)-state decode form.
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ;   y_t = C_t h_t + D x_t
+
+Used by mamba2-130m and (as the SSM half) jamba. NOTE (DESIGN.md): Jamba's
+paper uses Mamba-1 (S6) layers; we implement its SSM layers with the SSD
+form — same state size/interleave structure, TPU-friendlier compute.
+State math is f32 throughout.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import constrain
+from repro.models.layers import rms_norm, init_rms_norm
+
+
+class SSMConfig(NamedTuple):
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 128
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array   # (B, d_conv-1, conv_channels) trailing inputs
+    h: jax.Array      # (B, H, d_state, head_dim) f32 SSM state
+
+
+def _dims(d_model: int, cfg: SSMConfig):
+    d_inner = cfg.expand * d_model
+    n_heads = d_inner // cfg.head_dim
+    conv_ch = d_inner + 2 * cfg.n_groups * cfg.d_state
+    return d_inner, n_heads, conv_ch
+
+
+def init_ssm(key, d_model: int, cfg: SSMConfig, dtype) -> dict:
+    d_inner, H, conv_ch = _dims(d_model, cfg)
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * d_inner + 2 * cfg.n_groups * cfg.d_state + H
+    return {
+        "w_in": jax.random.normal(ks[0], (d_model, d_in_proj), dtype) * d_model ** -0.5,
+        "conv_w": jax.random.normal(ks[1], (cfg.d_conv, conv_ch), dtype) * 0.1,
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "dt_bias": jnp.zeros((H,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(dtype),
+        "d_skip": jnp.ones((H,), dtype),
+        "norm": init_rms_norm(d_inner, dtype),
+        "w_out": jax.random.normal(ks[2], (d_inner, d_model), dtype) * d_inner ** -0.5,
+    }
+
+
+def ssm_sharding(cfg: SSMConfig) -> dict:
+    return {
+        "w_in": ("embed", "ssm_inner"),
+        "conv_w": (None, "ssm_inner"),
+        "conv_b": ("ssm_inner",),
+        "dt_bias": (None,),
+        "a_log": (None,),
+        "d_skip": (None,),
+        "norm": {"scale": ("ssm_inner",)},
+        "w_out": ("ssm_inner", "embed"),
+    }
+
+
+def _split_in_proj(params, x, d_model, cfg: SSMConfig):
+    d_inner, H, conv_ch = _dims(d_model, cfg)
+    gds = cfg.n_groups * cfg.d_state
+    zxbcdt = x @ params["w_in"]
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner: d_inner + conv_ch]
+    dt = zxbcdt[..., d_inner + conv_ch:]
+    return z, xbc, dt
+
+
+def _causal_conv(params, xbc, cfg: SSMConfig):
+    """Depthwise causal conv over (B,S,C) with kernel (d_conv, C)."""
+    dc = cfg.d_conv
+    pads = jnp.pad(xbc, ((0, 0), (dc - 1, 0), (0, 0)))
+    out = sum(pads[:, i: i + xbc.shape[1], :] * params["conv_w"][i] for i in range(dc))
+    return jax.nn.silu(out + params["conv_b"])
+
+
+def _ssd_scan(xh, a, dtv, Bm, Cm, cfg: SSMConfig):
+    """Chunked SSD as one lax.scan over chunks: the (Q,Q) quadratic intra-chunk
+    form, the chunk-state contraction and the inter-chunk carry all live
+    inside the scan body, so peak memory is one chunk's tile regardless of S.
+
+    xh (B,S,H,P); a = dt*A (B,S,H) log-decay <= 0; dtv (B,S,H);
+    Bm/Cm (B,S,H,ds). Returns y (B,S,H,P) f32, final h (B,H,ds,P) f32."""
+    Bsz, S, H, P = xh.shape
+    ds = Bm.shape[-1]
+    Q = min(cfg.chunk, S)
+    nc = S // Q
+    assert S % Q == 0, (S, Q)
+
+    def r(t):  # (B,S,...) -> (nc,B,Q,...) scan-major
+        return t.reshape(Bsz, nc, Q, *t.shape[2:]).swapaxes(0, 1)
+
+    xs = tuple(map(r, (xh.astype(jnp.float32), a.astype(jnp.float32),
+                       dtv.astype(jnp.float32),
+                       Bm.astype(jnp.float32), Cm.astype(jnp.float32))))
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def chunk_body(h, inp):
+        x_c, a_c, dt_c, B_c, C_c = inp             # (B,Q,H,*) for this chunk
+        L = jnp.cumsum(a_c, axis=1)                # (B,Q,H)
+        # intra-chunk: M_ij = (C_i.B_j) exp(L_i - L_j) dt_j  (i >= j)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", C_c, B_c)
+        decay = jnp.exp(jnp.clip(L[:, :, None, :] - L[:, None, :, :], -60, 0))
+        M = scores * decay.transpose(0, 3, 1, 2) * dt_c.transpose(0, 2, 1)[:, :, None, :]
+        M = jnp.where(mask[None, None], M, 0.0)
+        y_intra = jnp.einsum("bhqk,bkhp->bqhp", M, x_c)
+        # inter-chunk: y_i += C_i exp(L_i) . h_prev
+        y_inter = jnp.einsum("bqhd,bhdp->bqhp", C_c * jnp.exp(jnp.clip(L, -60, 0))[..., None], h)
+        # state update: h = exp(sum a) h + sum_j exp(Lend - L_j) dt_j B_j (x) x_j
+        Lend = L[:, -1:, :]
+        w = jnp.exp(jnp.clip(Lend - L, -60, 0)) * dt_c
+        S_c = jnp.einsum("bqh,bqhd,bqhp->bhdp", w, B_c, x_c)
+        h_new = jnp.exp(jnp.clip(jnp.sum(a_c, axis=1), -60, 0))[:, :, None, None] * h + S_c
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((Bsz, H, ds, P), jnp.float32)
+    h_final, ys = jax.lax.scan(chunk_body, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(Bsz, S, H, P)
+    return y, h_final
+
+
+def ssm_forward(params: dict, x: jax.Array, d_model: int, cfg: SSMConfig,
+                return_cache: bool = False):
+    """Full-sequence Mamba-2 block (train / prefill)."""
+    Bsz, S, _ = x.shape
+    d_inner, H, conv_ch = _dims(d_model, cfg)
+    gds = cfg.n_groups * cfg.d_state
+    z, xbc, dt = _split_in_proj(params, x, d_model, cfg)
+    xbc_c = _causal_conv(params, xbc, cfg)
+    xc = xbc_c[..., :d_inner]
+    Bm = xbc_c[..., d_inner: d_inner + gds].reshape(Bsz, S, cfg.n_groups, cfg.d_state)
+    Cm = xbc_c[..., d_inner + gds:].reshape(Bsz, S, cfg.n_groups, cfg.d_state)
+    rep = H // cfg.n_groups
+    Bm = jnp.repeat(Bm, rep, axis=2)
+    Cm = jnp.repeat(Cm, rep, axis=2)
+
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))
+    a = dtv * A                                    # (B,S,H)
+    xh = xc.reshape(Bsz, S, H, cfg.head_dim)
+    xh = constrain(xh, "batch", None, "ssm_heads", None)
+    y, h_final = _ssd_scan(xh, a, dtv, Bm, Cm, cfg)
+    y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(Bsz, S, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"]["scale"])
+    out = y @ params["w_out"]
+    if not return_cache:
+        return out
+    conv_tail = xbc[:, S - (cfg.d_conv - 1):, :] if S >= cfg.d_conv - 1 else \
+        jnp.pad(xbc, ((0, 0), (cfg.d_conv - 1 - S, 0), (0, 0)))
+    return out, SSMCache(conv=conv_tail, h=h_final)
+
+
+def ssm_decode_step(params: dict, x: jax.Array, cache: SSMCache, d_model: int,
+                    cfg: SSMConfig):
+    """One-token recurrent step. x (B,1,d)."""
+    Bsz = x.shape[0]
+    d_inner, H, conv_ch = _dims(d_model, cfg)
+    gds = cfg.n_groups * cfg.d_state
+    z, xbc, dt = _split_in_proj(params, x, d_model, cfg)      # (B,1,*)
+    window = jnp.concatenate([cache.conv, xbc], axis=1)       # (B,d_conv,C)
+    conv_out = jnp.einsum("bkc,kc->bc", window, params["conv_w"]) + params["conv_b"]
+    xbc_c = jax.nn.silu(conv_out)[:, None, :]
+    xc = xbc_c[..., :d_inner]
+    Bm = xbc_c[..., d_inner: d_inner + gds].reshape(Bsz, cfg.n_groups, cfg.d_state)
+    Cm = xbc_c[..., d_inner + gds:].reshape(Bsz, cfg.n_groups, cfg.d_state)
+    rep = H // cfg.n_groups
+    Bm = jnp.repeat(Bm, rep, axis=1).astype(jnp.float32)      # (B,H,ds)
+    Cm = jnp.repeat(Cm, rep, axis=1).astype(jnp.float32)
+
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))  # (B,H)
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))
+    dec = jnp.exp(dtv * A)                                    # (B,H)
+    xh = xc[:, 0].reshape(Bsz, H, cfg.head_dim).astype(jnp.float32)
+    h = dec[:, :, None, None] * cache.h + jnp.einsum("bh,bhd,bhp->bhdp", dtv, Bm, xh)
+    y = jnp.einsum("bhd,bhdp->bhp", Cm, h)
+    y = y + params["d_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(Bsz, 1, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"]["scale"])
+    out = y @ params["w_out"]
+    new_conv = jnp.concatenate([cache.conv[:, 1:], xbc], axis=1)
+    return out, SSMCache(conv=new_conv, h=h)

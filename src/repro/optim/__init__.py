@@ -1,0 +1,11 @@
+from repro.optim.adamw import (
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+)
+from repro.optim.adafactor import adafactor_init, adafactor_update
+from repro.optim.schedules import constant_lr, warmup_cosine
+
+__all__ = ["adamw_init", "adamw_update", "adafactor_init", "adafactor_update",
+           "clip_by_global_norm", "global_norm", "constant_lr", "warmup_cosine"]

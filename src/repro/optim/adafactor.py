@@ -1,0 +1,73 @@
+"""Adafactor (Shazeer & Stern, 2018): factored second moments — rank-1
+(row, col) statistics instead of a full v tensor for matrices, cutting
+optimizer memory from 2x to ~1.01x params. The memory-scarce cells
+(deepseek-v3 train) can switch via --optimizer adafactor."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdafactorState(NamedTuple):
+    v_row: Any     # per-leaf: (rows,) for matrices, full shape for vectors
+    v_col: Any     # per-leaf: (cols,) for matrices, 0-size stub otherwise
+    count: jax.Array
+
+
+def _is_factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(params: Any) -> AdafactorState:
+    def vr(p):
+        if _is_factored(p.shape):
+            return jnp.zeros(p.shape[:-1], jnp.float32)
+        return jnp.zeros(p.shape, jnp.float32)
+
+    def vc(p):
+        if _is_factored(p.shape):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        return jnp.zeros((0,), jnp.float32)
+
+    return AdafactorState(v_row=jax.tree.map(vr, params),
+                          v_col=jax.tree.map(vc, params),
+                          count=jnp.zeros((), jnp.int32))
+
+
+def adafactor_update(grads: Any, state: AdafactorState, params: Any, *,
+                     lr=1e-2, decay: float = 0.8, eps: float = 1e-30,
+                     clip_threshold: float = 1.0,
+                     weight_decay: float = 0.0):
+    count = state.count + 1
+    beta2 = 1.0 - count.astype(jnp.float32) ** (-decay)
+
+    def upd(g, vr, vc, p):
+        g32 = g.astype(jnp.float32)
+        gsq = g32 * g32 + eps
+        if _is_factored(p.shape):
+            vr_new = beta2 * vr + (1 - beta2) * jnp.mean(gsq, axis=-1)
+            vc_new = beta2 * vc + (1 - beta2) * jnp.mean(gsq, axis=-2)
+            denom = jnp.maximum(jnp.mean(vr_new, axis=-1, keepdims=True), eps)
+            vhat = (vr_new[..., None] / denom[..., None]) * vc_new[..., None, :]
+            step = g32 / jnp.sqrt(vhat + eps)
+        else:
+            vr_new = beta2 * vr + (1 - beta2) * gsq
+            vc_new = vc
+            step = g32 / jnp.sqrt(vr_new + eps)
+        # update clipping (RMS)
+        rms = jnp.sqrt(jnp.mean(step * step) + eps)
+        step = step / jnp.maximum(1.0, rms / clip_threshold)
+        p32 = p.astype(jnp.float32)
+        p_new = p32 - lr * (step + weight_decay * p32)
+        return p_new.astype(p.dtype), vr_new, vc_new
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    out = [upd(g, vr, vc, p) for g, vr, vc, p in zip(
+        flat_g, jax.tree.leaves(state.v_row), jax.tree.leaves(state.v_col),
+        jax.tree.leaves(params))]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_vr = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_vc = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, AdafactorState(v_row=new_vr, v_col=new_vc, count=count)

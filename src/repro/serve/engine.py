@@ -1,0 +1,51 @@
+"""Serving entry points: prefill_step / decode_step builders (the functions
+the dry-run lowers for prefill_32k / decode_32k / long_500k cells) and a
+simple batched greedy generation driver for the examples."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+
+
+def make_prefill_step(cfg: M.ModelConfig, max_len: int):
+    """prefill_step(params, batch) -> (last_logits, caches)."""
+
+    def prefill_step(params, batch):
+        logits, caches = M.prefill(params, cfg, batch, max_len=max_len)
+        return logits[:, -1], caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg: M.ModelConfig):
+    """decode_step(params, tokens, caches) -> (logits, caches). One new token
+    with a KV cache of seq_len — exactly the assigned decode_* lowering."""
+
+    def decode_step(params, tokens, caches):
+        return M.decode_step(params, cfg, tokens, caches)
+
+    return decode_step
+
+
+def greedy_generate(params, cfg: M.ModelConfig, batch: dict, *, steps: int,
+                    max_len: int):
+    """Prefill then greedy-decode `steps` tokens (example/test driver)."""
+    prefill_step = jax.jit(make_prefill_step(cfg, max_len))
+    decode_step = jax.jit(make_decode_step(cfg))
+    logits, caches = prefill_step(params, batch)
+    outs = []
+    if cfg.frontend == "codebooks":
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (B,K)
+    else:
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (B,)
+    for _ in range(steps):
+        outs.append(tok)
+        logits, caches = decode_step(params, tok, caches)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    outs.append(tok)
+    return jnp.stack(outs, axis=1)

@@ -1,0 +1,3 @@
+from repro.train.step import make_train_step, lm_loss
+
+__all__ = ["make_train_step", "lm_loss"]

@@ -1,0 +1,120 @@
+"""Training step: causal-LM loss (z-loss regularized), microbatched gradient
+accumulation (lax.scan), remat, clipping, AdamW. The returned step_fn is a
+plain jittable function — launch/train.py wraps it in jit with in/out
+shardings; launch/dryrun.py lowers it AOT."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.optim.adamw import AdamWState, adamw_update, clip_by_global_norm
+
+
+def _xent(logits: jax.Array, targets: jax.Array, z_loss: float = 1e-4):
+    """Stable CE + z-loss. logits (..., V) f32, targets (...) int32."""
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    ce = lse - gold
+    return ce + z_loss * jnp.square(lse)
+
+
+def lm_loss(params, cfg: M.ModelConfig, batch: dict, aux_weight: float = 0.01,
+            mtp_weight: float = 0.3):
+    """Next-token loss across frontends; adds MoE aux and MTP losses."""
+    need_hidden = cfg.mtp_depth > 0
+    out = M.forward(params, cfg, batch, return_hidden=need_hidden)
+    logits, aux = out[0], out[1]
+    toks = batch["tokens"]
+
+    if cfg.frontend == "codebooks":          # (B,S,K,V) vs (B,S,K)
+        ce = _xent(logits[:, :-1], toks[:, 1:])
+        loss = ce.mean()
+    elif cfg.frontend == "patches":          # predict text tokens only
+        P = cfg.vision_tokens
+        txt_logits = logits[:, P:]
+        ce = _xent(txt_logits[:, :-1], toks[:, 1:])
+        loss = ce.mean()
+    else:
+        ce = _xent(logits[:, :-1], toks[:, 1:])
+        loss = ce.mean()
+
+    metrics = {"ce": loss}
+    if cfg.mtp_depth > 0 and cfg.frontend == "tokens":
+        h = out[2]
+        mtp_logits = M.mtp_logits(params, cfg, h, batch)
+        # depth-1 MTP predicts t+2: logits[:, t] vs tokens[:, t+2]
+        mtp_ce = _xent(mtp_logits[:, :-2], toks[:, 2:]).mean()
+        loss = loss + mtp_weight * mtp_ce
+        metrics["mtp_ce"] = mtp_ce
+    loss = loss + aux_weight * aux
+    metrics["aux"] = aux
+    return loss, metrics
+
+
+def make_train_step(cfg: M.ModelConfig, *, microbatches: int = 1,
+                    learning_rate=1e-3, max_grad_norm: float = 1.0,
+                    remat: bool = True, lr_schedule=None,
+                    grad_shardings=None):
+    """Build step_fn(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    Gradient accumulation: the global batch splits into `microbatches` groups
+    scanned sequentially; grads are averaged in f32. This bounds per-layer
+    activation memory for the huge cells (deepseek-v3 train_4k uses 8).
+
+    grad_shardings: optional NamedSharding tree (same structure as params).
+    Constraining each microbatch's grads to the FSDP-sharded param layout
+    makes XLA reduce-SCATTER weight grads instead of full-shape all-reducing
+    them (ZeRO-2-style; ~2x grad wire on the fsdp'd cells)."""
+
+    # Remat lives at the layer-scan boundary inside the model (cfg.remat) —
+    # wrapping the whole loss in jax.checkpoint would still stash every
+    # per-layer scan residual during the rematerialized forward.
+    loss_fn = lm_loss
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, cfg, batch)
+        if grad_shardings is not None:
+            grads = jax.tree.map(
+                lambda g, s: jax.lax.with_sharding_constraint(g, s) if s is not None else g,
+                grads, grad_shardings)
+        metrics = dict(metrics, loss=loss)
+        return grads, metrics
+
+    def step_fn(params, opt_state: AdamWState, batch: dict):
+        if microbatches == 1:
+            grads, metrics = grads_of(params, batch)
+        else:
+            def resh(x):
+                b = x.shape[0]
+                assert b % microbatches == 0, (b, microbatches)
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+            mb = jax.tree.map(resh, batch)
+
+            def acc_body(carry, mb_batch):
+                g_acc, m_acc = carry
+                g, m = grads_of(params, mb_batch)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                m_acc = jax.tree.map(lambda a, b: a + b, m_acc, m)
+                return (g_acc, m_acc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            m0 = {"loss": 0.0, "ce": 0.0, "aux": 0.0}
+            if cfg.mtp_depth > 0 and cfg.frontend == "tokens":
+                m0["mtp_ce"] = 0.0
+            m0 = jax.tree.map(jnp.float32, m0)
+            (grads, metrics), _ = jax.lax.scan(acc_body, (g0, m0), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            metrics = jax.tree.map(lambda m: m / microbatches, metrics)
+
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        lr = lr_schedule(opt_state.count) if lr_schedule else learning_rate
+        new_params, new_opt = adamw_update(grads, opt_state, params, lr=lr)
+        metrics = dict(metrics, grad_norm=gnorm)
+        return new_params, new_opt, metrics
+
+    return step_fn

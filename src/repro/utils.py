@@ -1,0 +1,54 @@
+"""Shared small utilities: pytree helpers, dtype helpers, timing."""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_size(tree: Any) -> int:
+    """Total number of elements across all leaves."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree: Any) -> int:
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def tree_cast(tree: Any, dtype) -> Any:
+    return jax.tree.map(lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+
+
+def has_nan(tree: Any) -> bool:
+    leaves = [jnp.any(jnp.isnan(x)) for x in jax.tree.leaves(tree) if jnp.issubdtype(x.dtype, jnp.floating)]
+    if not leaves:
+        return False
+    return bool(jax.device_get(jnp.any(jnp.stack(leaves))))
+
+
+def block_until_ready(tree: Any) -> Any:
+    return jax.tree.map(lambda x: x.block_until_ready() if hasattr(x, "block_until_ready") else x, tree)
+
+
+def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3, **kwargs) -> tuple[float, Any]:
+    """Wall-clock a jitted fn; returns (best seconds, last output)."""
+    out = None
+    for _ in range(warmup):
+        out = block_until_ready(fn(*args, **kwargs))
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = block_until_ready(fn(*args, **kwargs))
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def pretty_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(n) < 1024.0:
+            return f"{n:.2f}{unit}"
+        n /= 1024.0
+    return f"{n:.2f}PiB"

@@ -1,0 +1,6 @@
+"""Test configuration. NOTE: no XLA device-count flags here — tests must see
+the real single CPU device; only launch/dryrun.py forces 512 host devices."""
+import jax
+
+# Convex-solver exactness tests need f64 on CPU; model code pins its own dtypes.
+jax.config.update("jax_enable_x64", True)

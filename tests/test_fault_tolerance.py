@@ -1,0 +1,44 @@
+"""End-to-end fault tolerance: the training launcher survives an injected
+node failure (supervisor restores + retries) and restart-resumes exactly."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+def _run_train(tmp, extra):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)  # never inherit forced host-device counts
+    env["PYTHONPATH"] = "src"
+    cmd = [sys.executable, "-m", "repro.launch.train",
+           "--arch", "internlm2-1.8b", "--smoke", "--batch", "4", "--seq", "64",
+           "--ckpt-dir", os.path.join(tmp, "ckpt"), "--ckpt-every", "5",
+           "--log-every", "5"] + extra
+    return subprocess.run(cmd, cwd=os.getcwd(), env=env, capture_output=True,
+                          text=True, timeout=900)
+
+
+@pytest.mark.slow
+def test_supervisor_recovers_from_injected_failure(tmp_path):
+    r = _run_train(str(tmp_path), ["--steps", "15", "--inject-fault-at", "8"])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "[supervisor] step 8 failed" in r.stdout
+    assert "done at step 15" in r.stdout
+
+
+@pytest.mark.slow
+def test_restart_resumes_from_checkpoint(tmp_path):
+    r1 = _run_train(str(tmp_path), ["--steps", "10"])
+    assert r1.returncode == 0, r1.stdout + r1.stderr
+    r2 = _run_train(str(tmp_path), ["--steps", "20"])
+    assert r2.returncode == 0, r2.stdout + r2.stderr
+    assert "resumed from step 10" in r2.stdout
+    assert "done at step 20" in r2.stdout
+
+    # determinism: an uninterrupted 20-step run lands on the same loss
+    r3 = _run_train(str(tmp_path) + "_b", ["--steps", "20"])
+    loss_resumed = r2.stdout.strip().splitlines()[-1].split("loss")[-1].strip()
+    loss_straight = r3.stdout.strip().splitlines()[-1].split("loss")[-1].strip()
+    assert abs(float(loss_resumed) - float(loss_straight)) < 1e-4, (
+        loss_resumed, loss_straight, r2.stdout, r3.stdout)

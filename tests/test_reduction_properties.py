@@ -1,0 +1,89 @@
+"""Property-based tests (hypothesis) of the reduction's invariants."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.baselines import elastic_net_cd
+from repro.core import SvenOperator, build_svm_dataset, gram_blocks, gram_reference, sven
+from repro.core.elastic_net import kkt_violation, lambda1_max, smooth_grad
+from repro.data.synthetic import make_regression
+
+prob = st.tuples(
+    st.integers(min_value=5, max_value=60),     # n
+    st.integers(min_value=3, max_value=60),     # p
+    st.integers(min_value=0, max_value=10_000), # seed
+    st.floats(min_value=0.2, max_value=8.0),    # t
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(prob)
+def test_operator_identities(args):
+    """Matrix-free products == explicit products for random problems."""
+    n, p, seed, t = args
+    X, y, _ = make_regression(n, p, k_true=min(5, p), seed=seed)
+    op = SvenOperator(X=X, y=y, t=t)
+    Xhat, yhat = build_svm_dataset(X, y, t)
+    Zhat = (yhat[:, None] * Xhat).T
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (n,), X.dtype)
+    v = jax.random.normal(key, (2 * p,), X.dtype)
+    scale = max(1.0, float(jnp.abs(Xhat).max()) ** 2 * p)
+    np.testing.assert_allclose(op.xhat_matvec(w), Xhat @ w, atol=1e-9 * scale)
+    np.testing.assert_allclose(op.xhat_rmatvec(v), Xhat.T @ v, atol=1e-9 * scale)
+    np.testing.assert_allclose(op.kernel_matvec(v), Zhat.T @ (Zhat @ v), atol=1e-8 * scale)
+
+
+@settings(max_examples=15, deadline=None)
+@given(prob)
+def test_gram_block_assembly(args):
+    n, p, seed, t = args
+    X, y, _ = make_regression(n, p, k_true=min(5, p), seed=seed)
+    K_blocks = gram_blocks(X, y, t)
+    K_ref = gram_reference(X, y, t)
+    scale = max(1.0, float(jnp.abs(K_ref).max()))
+    np.testing.assert_allclose(K_blocks, K_ref, atol=1e-10 * scale)
+    # kernel must be PSD (it is a Gram matrix)
+    eigs = jnp.linalg.eigvalsh(K_ref)
+    assert float(eigs.min()) > -1e-7 * scale
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=1000), st.floats(min_value=0.1, max_value=5.0))
+def test_sven_solution_invariants(seed, lam2):
+    """For any solvable instance: |beta|_1 == t (tight), KKT ~ 0, and the
+    recovered beta has the sign-split property beta+ .* beta- == 0."""
+    X, y, _ = make_regression(40, 70, k_true=8, seed=seed)
+    l1 = 0.35 * float(lambda1_max(X, y))
+    beta_cd = elastic_net_cd(X, y, l1, lam2).beta
+    t = float(jnp.sum(jnp.abs(beta_cd)))
+    hypothesis.assume(t > 1e-6)
+    sol = sven(X, y, t, lam2)
+    p = X.shape[1]
+    # tight L1 constraint
+    np.testing.assert_allclose(float(jnp.sum(jnp.abs(sol.beta))), t, rtol=1e-6)
+    # alpha+ and alpha- are complementary per coordinate (unique EN solution)
+    overlap = float(jnp.max(sol.alpha[:p] * sol.alpha[p:]))
+    assert overlap < 1e-8 * (1 + float(sol.alpha.max()) ** 2)
+    assert float(sol.kkt) < 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=1000))
+def test_cd_satisfies_penalized_kkt(seed):
+    """Independent validation of the ground-truth CD solver: subgradient
+    optimality of the penalized objective."""
+    X, y, _ = make_regression(60, 30, k_true=6, seed=seed)
+    lam1 = 0.3 * float(lambda1_max(X, y))
+    lam2 = 1.0
+    beta = elastic_net_cd(X, y, lam1, lam2).beta
+    g = smooth_grad(X, y, beta, lam2)
+    active = jnp.abs(beta) > 1e-10
+    # active: g_j + lam1 sign(beta_j) == 0 ; inactive: |g_j| <= lam1
+    act_res = jnp.where(active, jnp.abs(g + lam1 * jnp.sign(beta)), 0.0)
+    inact_res = jnp.where(~active, jnp.maximum(jnp.abs(g) - lam1, 0.0), 0.0)
+    assert float(jnp.max(act_res)) < 1e-6 * (1 + lam1)
+    assert float(jnp.max(inact_res)) < 1e-6 * (1 + lam1)

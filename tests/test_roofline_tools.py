@@ -1,0 +1,72 @@
+"""Unit tests of the dry-run analysis tooling itself: the HLO collective
+parser (incl. tuple-result combined all-reduces and async -start forms) and
+the roofline term arithmetic."""
+import numpy as np
+
+from repro.launch.dryrun import collective_bytes, _combine_probes
+from repro.launch.roofline import roofline_terms
+
+HLO = """
+HloModule jit_step
+%fused (a: bf16[4,128]) -> bf16[4,128] { ... }
+%all-gather.5 = bf16[2,1024,512]{2,1,0} all-gather(%p0), dimensions={1}
+%all-reduce = (f32[], f32[8192]{0}, f32[8192,8192]{1,0}) all-reduce(%a, %b, %c), to_apply=%add
+%ar2 = bf16[1024]{0} all-reduce-start(%x), channel_id=3
+%ar2d = bf16[1024]{0} all-reduce-done(%ar2)
+%rs = f32[32,8192]{1,0} reduce-scatter(%g), dimensions={0}
+%a2a = bf16[16,64,7168]{2,1,0} all-to-all(%buf), dimensions={0}
+%cp = f32[256]{0} collective-permute(%h), source_target_pairs={{0,1}}
+not_an_op_line
+%dot = f32[128,128]{1,0} dot(%l, %r), lhs_contracting_dims={1}
+"""
+
+
+def test_collective_parser():
+    out = collective_bytes(HLO)
+    assert out["all-gather"]["bytes"] == 2 * 1024 * 512 * 2
+    assert out["all-gather"]["count"] == 1
+    # tuple all-reduce: 4 + 8192*4 + 8192*8192*4 ; async start counted once
+    ar = out["all-reduce"]
+    assert ar["count"] == 2
+    assert ar["bytes"] == (4 + 8192 * 4 + 8192 * 8192 * 4) + 1024 * 2
+    assert out["reduce-scatter"]["bytes"] == 32 * 8192 * 4
+    assert out["all-to-all"]["bytes"] == 16 * 64 * 7168 * 2
+    assert out["collective-permute"]["bytes"] == 256 * 4
+    assert "dot" not in out
+
+
+def test_probe_combination_linear():
+    rec = {}
+    recA = {"flops": 100.0, "bytes_accessed": 10.0,
+            "collectives": {"all-reduce": {"count": 2, "bytes": 8}}}
+    recB = {"flops": 160.0, "bytes_accessed": 14.0,
+            "collectives": {"all-reduce": {"count": 3, "bytes": 11}}}
+    _combine_probes(rec, recA, recB, n_periods=5, mb=2)
+    # per-period = 60 flops; total = 2*(100 + 4*60) = 680
+    assert rec["corrected_flops"] == 680
+    assert rec["corrected_bytes"] == 2 * (10 + 4 * 4)
+    ar = rec["corrected_collectives"]["all-reduce"]
+    assert ar["count"] == 2 * (2 + 4 * 1)
+    assert ar["bytes"] == 2 * (8 + 4 * 3)
+
+
+def test_roofline_terms_math():
+    rec = {
+        "chips": 256,
+        "mesh": {"data": 16, "model": 16},
+        "kind": "train",
+        "corrected_flops": 197e12,          # exactly 1 second of compute
+        "corrected_bytes": 819e9,           # exactly 1 second of HBM
+        "corrected_collectives": {
+            "all-reduce": {"count": 1, "bytes": 50e9},   # 2*(15/16)*50e9/50e9
+        },
+    }
+    t = roofline_terms(rec)
+    assert abs(t["t_compute_s"] - 1.0) < 1e-9
+    assert abs(t["t_memory_s"] - 1.0) < 1e-9
+    assert abs(t["t_collective_s"] - 2 * 15 / 16) < 1e-9
+    assert t["bottleneck"] == "collective"
+    # sven cells ring over the whole mesh
+    rec["kind"] = "sven"
+    t2 = roofline_terms(rec)
+    assert abs(t2["t_collective_s"] - 2 * 255 / 256) < 1e-9

@@ -1,0 +1,50 @@
+"""Gap-safe screening: safety (never discards true support) + effectiveness
+(at the optimum, discards almost everything inactive) + end-to-end exactness."""
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.baselines import elastic_net_cd
+from repro.core.elastic_net import lambda1_max
+from repro.core.screening import gap_safe_screen, sven_with_screening
+from repro.data.synthetic import make_regression
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 500), st.floats(0.15, 0.6), st.floats(0.1, 5.0))
+def test_screening_is_safe(seed, l1_frac, lam2):
+    """No feature in the exact solution's support is ever discarded — for an
+    arbitrary (crude) warm point."""
+    X, y, _ = make_regression(40, 120, k_true=8, seed=seed)
+    l1 = l1_frac * float(lambda1_max(X, y))
+    beta_star = elastic_net_cd(X, y, l1, lam2).beta
+    support = np.asarray(jnp.abs(beta_star) > 1e-10)
+    # crude warm point: half-converged FISTA
+    from repro.baselines.fista import elastic_net_fista
+    warm = elastic_net_fista(X, y, l1, lam2, max_iters=40).beta
+    scr = gap_safe_screen(X, y, warm, l1, lam2)
+    keep = np.asarray(scr.keep)
+    assert (keep | ~support).all(), "screening discarded an active feature"
+
+
+def test_screening_tight_at_optimum():
+    X, y, _ = make_regression(50, 200, k_true=6, seed=1)
+    l1 = 0.4 * float(lambda1_max(X, y))
+    beta_star = elastic_net_cd(X, y, l1, 1.0).beta
+    scr = gap_safe_screen(X, y, beta_star, l1, 1.0)
+    n_support = int((jnp.abs(beta_star) > 1e-10).sum())
+    # at the optimum the gap ~ 0 so the rule keeps ~ the support only
+    assert int(scr.n_kept) <= max(2 * n_support, n_support + 5)
+    assert float(scr.gap) < 1e-6
+
+
+def test_sven_with_screening_exact():
+    X, y, _ = make_regression(45, 160, k_true=7, seed=3)
+    lam2 = 1.0
+    l1 = 0.35 * float(lambda1_max(X, y))
+    beta_cd = elastic_net_cd(X, y, l1, lam2).beta
+    t = float(jnp.sum(jnp.abs(beta_cd)))
+    beta, sol, scr = sven_with_screening(X, y, t, lam2, warm_beta=beta_cd)
+    np.testing.assert_allclose(np.asarray(beta), np.asarray(beta_cd), atol=1e-7)
+    assert int(scr.n_kept) < 160  # actually shrank the problem
