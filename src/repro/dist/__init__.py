@@ -1,0 +1,130 @@
+"""Logical-axis distribution layer (DESIGN.md §Dist).
+
+Model code never names mesh axes. It annotates activations with LOGICAL axis
+names (`constrain(x, "batch", None, "heads", None)`) and parameters with
+logical spec tuples (the per-module `*_sharding()` helpers). A RULE TABLE —
+`DEFAULT_RULES`, overridable per config (`cfg.rules_override`) and per shape
+cell (launch/dryrun.py) — maps logical names onto physical mesh axes at
+lowering time.
+
+`constrain` resolves through the rule table of the innermost active
+`mesh_context` and applies `jax.lax.with_sharding_constraint`; outside any
+context it is the identity, so the same model code runs unmodified on a
+single CPU device (tests) and on the 16x16 production mesh (dry-run).
+
+Resolution is forgiving by construction: a logical axis whose mesh axis does
+not evenly divide the array dimension, or whose mesh axis was already
+consumed by an earlier dimension of the same spec, resolves to `None`
+(unsharded) rather than erroring — small smoke configs and odd head counts
+lower on any mesh.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Logical axis -> mesh axis (or None = replicated). One table for the whole
+# model zoo; per-arch deviations go through cfg.rules_override and per-shape
+# deviations through launch/dryrun.py::_rules_for.
+DEFAULT_RULES: dict = {
+    # activations
+    "batch": "data",          # global batch dim (DP)
+    "moe_batch": "data",      # MoE capacity buffer's batch dim (pre/post a2a)
+    "seq_kv": None,           # KV sequence dim; "model"/"data" for long-ctx cells
+    # shared activation/param feature axes
+    "embed": None,            # d_model: replicated unless fsdp widens it
+    "mlp": "model",           # dense FFN hidden (Megatron col->row TP)
+    "vocab": "model",         # logits / embedding-table vocab dim
+    "heads": "model",         # query heads (TP)
+    "kv_heads": "model",      # KV heads (GQA TP; skipped when it won't divide)
+    "ssm_inner": "model",     # mamba d_inner channels
+    "ssm_heads": "model",     # SSD state heads
+    "experts": "model",       # expert parallelism (mixtral overrides to TP)
+    "expert_ffn": None,       # per-expert FFN hidden (TP-within-expert if set)
+    "expert_fsdp": None,      # expert weight d_model dim (deepseek: "data")
+    "latent": None,           # MLA low-rank latent dims
+    # parameter-only pseudo-axis: when set, params_shardings/zero widen each
+    # weight's first unsharded divisible dim over this mesh axis (FSDP/ZeRO).
+    "fsdp": None,
+}
+
+_state = threading.local()
+
+
+def _stack() -> list:
+    if not hasattr(_state, "stack"):
+        _state.stack = []
+    return _state.stack
+
+
+@contextmanager
+def mesh_context(mesh: Mesh, rules: Optional[dict] = None):
+    """Activate `mesh` + a rule table for constrain()/params_shardings().
+
+    `rules` entries take precedence over DEFAULT_RULES; passing a partial
+    override dict and passing a fully merged table are both supported.
+    Contexts nest; the innermost wins.
+    """
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    _stack().append((mesh, merged))
+    try:
+        yield mesh
+    finally:
+        _stack().pop()
+
+
+def current_context() -> Optional[tuple]:
+    """(mesh, rules) of the innermost active mesh_context, or None."""
+    stack = _stack()
+    return stack[-1] if stack else None
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def resolve_spec(names: tuple, shape: tuple, mesh: Mesh, rules: dict) -> P:
+    """Logical names (one per dim, None = unsharded) -> PartitionSpec.
+
+    Skips a mesh axis when it would not divide the dimension or was already
+    used by an earlier dimension of this spec.
+    """
+    used: set = set()
+    out = []
+    for dim, name in zip(shape, names):
+        axis = rules.get(name) if name is not None else None
+        if axis is None:
+            out.append(None)
+            continue
+        axes = (axis,) if isinstance(axis, str) else tuple(axis)
+        if (any(a not in mesh.shape for a in axes) or any(a in used for a in axes)
+                or dim % _axis_size(mesh, axes) != 0):
+            out.append(None)
+            continue
+        used.update(axes)
+        out.append(axis)
+    return P(*out)
+
+
+def constrain(x: jax.Array, *names) -> jax.Array:
+    """with_sharding_constraint(x, rules-resolved spec) — no-op outside a
+    mesh_context. `names` gives one logical axis name (or None) per dim."""
+    if len(names) != x.ndim:
+        raise ValueError(f"constrain: {len(names)} names for rank-{x.ndim} array")
+    ctx = current_context()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = resolve_spec(names, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,137 @@
+"""Pytree -> NamedSharding resolution through the logical rule table.
+
+`params_shardings` walks a parameter pytree (arrays or ShapeDtypeStructs —
+`jax.eval_shape(init_model)` is the usual input) and recognizes the module
+sub-dicts by their key signatures (attention / MLA / MoE / dense MLP / SSM /
+embedding / norm), applying each module's own `*_sharding()` logical spec.
+Stacked scan-over-periods leaves (one extra leading dim vs the module spec)
+get a `None` prepended. Leaves nothing unresolved: unknown leaves fall back
+to replicated, then the `fsdp` rule (when set) widens every weight's first
+unsharded divisible dim — FSDP without per-arch spec tables.
+
+All resolvers require an active `dist.mesh_context`; the mesh and rule table
+come from it, never from arguments.
+"""
+from __future__ import annotations
+
+from types import SimpleNamespace
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist import current_context, resolve_spec
+from repro.dist.zero import _widen_spec
+
+# cache namedtuple field signatures -> per-field logical specs
+_CACHE_SPECS = {
+    ("k", "v", "pos"): {                      # attention KVCache
+        "k": ("batch", "seq_kv", "kv_heads", None),
+        "v": ("batch", "seq_kv", "kv_heads", None),
+        "pos": ()},
+    ("c_kv", "k_rope", "pos"): {              # MLACache (latent + rope keys)
+        "c_kv": ("batch", "seq_kv", None),
+        "k_rope": ("batch", "seq_kv", None),
+        "pos": ()},
+    ("conv", "h"): {                          # SSMCache
+        "conv": ("batch", None, "ssm_inner"),
+        "h": ("batch", "ssm_heads", None, None)},
+}
+
+
+def _require_ctx():
+    ctx = current_context()
+    if ctx is None:
+        raise RuntimeError("dist.shardings resolvers require an active "
+                           "dist.mesh_context(mesh, rules=...)")
+    return ctx
+
+
+def _module_specs(d: dict):
+    """Match a params sub-dict to its module's logical sharding spec."""
+    from repro.models.attention import attention_sharding
+    from repro.models.layers import mlp_sharding
+    from repro.models.mla import mla_sharding
+    from repro.models.moe import moe_sharding
+    from repro.models.ssm import ssm_sharding
+
+    keys = set(d)
+    if {"w_dq", "w_uq", "w_dkv", "w_kr", "w_uk", "w_uv", "wo"} <= keys:
+        return mla_sharding(None)
+    if {"wq", "wk", "wv", "wo"} <= keys:
+        return attention_sharding(qkv_bias="bq" in keys)
+    if {"router", "w_gate", "w_up", "w_down"} <= keys:
+        return moe_sharding(SimpleNamespace(n_shared=int("shared" in keys)))
+    if {"w_gate", "w_up", "w_down"} <= keys:
+        return mlp_sharding()
+    if {"w_in", "conv_w", "a_log"} <= keys:
+        return ssm_sharding(None)
+    if keys == {"table"}:
+        return {"table": ("vocab", "embed")}
+    if keys == {"scale"}:
+        return {"scale": (None,)}
+    return None
+
+
+def _align(names, ndim: int) -> tuple:
+    """Pad a logical spec to `ndim` dims (stacked leaves get leading Nones);
+    a spec that cannot match the rank resolves fully replicated."""
+    names = tuple(names) if names is not None else ()
+    if len(names) > ndim:
+        return (None,) * ndim
+    return (None,) * (ndim - len(names)) + names
+
+
+def _leaf_sharding(leaf, names, mesh, rules, fsdp=None):
+    shape = tuple(leaf.shape)
+    spec = resolve_spec(_align(names, len(shape)), shape, mesh, rules)
+    if fsdp is not None and fsdp in mesh.shape:
+        spec = _widen_spec(spec, shape, fsdp, mesh)
+    return NamedSharding(mesh, spec)
+
+
+def _walk(node, spec, leaf_fn):
+    if isinstance(node, dict):
+        sub = spec if isinstance(spec, dict) else (_module_specs(node) or {})
+        return {k: _walk(v, sub.get(k), leaf_fn) for k, v in node.items()}
+    if hasattr(node, "_fields"):              # NamedTuple (cache containers)
+        sub = _CACHE_SPECS.get(node._fields, spec if isinstance(spec, dict) else {})
+        return type(node)(*(_walk(getattr(node, f), sub.get(f), leaf_fn)
+                            for f in node._fields))
+    if isinstance(node, (list, tuple)):
+        return type(node)(_walk(v, spec, leaf_fn) for v in node)
+    return leaf_fn(node, spec if isinstance(spec, (tuple, list)) else None)
+
+
+def params_shardings(params):
+    """Parameter pytree (arrays / ShapeDtypeStructs) -> NamedSharding tree."""
+    mesh, rules = _require_ctx()
+    fsdp = rules.get("fsdp")
+    return _walk(params, None,
+                 lambda leaf, names: _leaf_sharding(leaf, names, mesh, rules,
+                                                    fsdp=fsdp))
+
+
+def batch_shardings(batch):
+    """Model-input pytree -> shardings: dim 0 is the global batch ("batch"
+    rule, normally the data axis), everything else replicated."""
+    mesh, rules = _require_ctx()
+
+    def leaf(x):
+        names = ("batch",) + (None,) * (max(x.ndim, 1) - 1)
+        return _leaf_sharding(x, names[:x.ndim], mesh, rules)
+
+    return jax.tree.map(leaf, batch)
+
+
+def cache_shardings(caches):
+    """Decode-cache pytree -> shardings via the cache-container signatures
+    (KVCache / MLACache / SSMCache); stacked body caches align like params."""
+    mesh, rules = _require_ctx()
+    return _walk(caches, None,
+                 lambda leaf, names: _leaf_sharding(leaf, names, mesh, rules))
+
+
+def replicated(x):
+    """Fully replicated NamedSharding(s) on the active mesh, matching x."""
+    mesh, _ = _require_ctx()
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), x)

@@ -1,0 +1,52 @@
+"""ZeRO-1 optimizer-state sharding (DESIGN.md §Dist).
+
+Optimizer moments don't enter the forward/backward math, so they can shard
+wider than the params they mirror: `_widen_spec` adds the data axis to the
+first unsharded dim it divides. launch/train|dryrun place AdamW m/v with
+these specs — per-device optimizer memory drops by the data-axis size while
+param shardings (and therefore the step HLO) stay untouched; XLA inserts the
+gather on the update path.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _uses_axis(entry, axis: str) -> bool:
+    if entry is None:
+        return False
+    if isinstance(entry, (tuple, list)):
+        return axis in entry
+    return entry == axis
+
+
+def _widen_spec(spec: P, shape: tuple, axis: str, mesh) -> P:
+    """Add `axis` to the FIRST unsharded dim of `spec` that it divides.
+
+    Specs already using `axis`, and shapes with no unsharded dim divisible by
+    the axis size, are returned unchanged. Only `mesh.shape` is consulted, so
+    any object with a `.shape` axis->size mapping works.
+    """
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    if any(_uses_axis(e, axis) for e in entries):
+        return spec
+    size = mesh.shape[axis]
+    for i, (entry, dim) in enumerate(zip(entries, shape)):
+        if entry is None and dim % size == 0:
+            entries[i] = axis
+            return P(*entries)
+    return spec
+
+
+def zero1_shardings(param_shardings, param_shapes, axis: str = "data"):
+    """NamedSharding tree for optimizer moments: each param's sharding widened
+    over `axis` (ZeRO-1). Trees must match; meshes without `axis` pass through."""
+
+    def widen(sh, leaf):
+        if axis not in sh.mesh.shape:
+            return sh
+        return NamedSharding(sh.mesh, _widen_spec(sh.spec, tuple(leaf.shape),
+                                                  axis, sh.mesh))
+
+    return jax.tree.map(widen, param_shardings, param_shapes)

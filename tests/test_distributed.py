@@ -122,6 +122,27 @@ _SUBPROC = textwrap.dedent("""
     np.testing.assert_allclose(np.asarray(K), np.asarray(gram_reference(X, y, 1.1)), atol=1e-9)
     print("gram8 OK")
 
+    # 2b) reduce-scatter grams: rows come out feature-interleaved — device r
+    # emits [+rows_r ; -rows_r] — and interleaved_labels matches that order
+    from repro.core.distributed import (distributed_gram_rs,
+                                        distributed_gram_rs_syrk,
+                                        interleaved_labels)
+    K_ref = np.asarray(gram_reference(X, y, 1.1))
+    p, n_dev = X.shape[1], 8
+    rows = p // n_dev
+    perm = np.concatenate([
+        np.concatenate([np.arange(r * rows, (r + 1) * rows),
+                        p + np.arange(r * rows, (r + 1) * rows)])
+        for r in range(n_dev)])
+    K_rs = distributed_gram_rs(mesh2, X, y, 1.1)
+    np.testing.assert_allclose(np.asarray(K_rs), K_ref[perm, :], atol=1e-9)
+    K_syrk = distributed_gram_rs_syrk(mesh2, X, y, 1.1)
+    np.testing.assert_allclose(np.asarray(K_syrk), K_ref[perm, :], atol=1e-9)
+    yhat = np.concatenate([np.ones(p), -np.ones(p)])
+    np.testing.assert_array_equal(
+        np.asarray(interleaved_labels(p, n_dev, X.dtype)), yhat[perm])
+    print("gram_rs OK")
+
     # 3) distributed hessian matvec on 8 devices == oracle
     from repro.core.distributed import make_distributed_hessian_matvec
     from repro.kernels.ref import hessian_matvec_ref
@@ -146,4 +167,5 @@ def test_multidevice_subprocess():
     assert r.returncode == 0, r.stdout + r.stderr
     assert "pipeline OK" in r.stdout
     assert "gram8 OK" in r.stdout
+    assert "gram_rs OK" in r.stdout
     assert "hess8 OK" in r.stdout

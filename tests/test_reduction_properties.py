@@ -1,4 +1,8 @@
 """Property-based tests (hypothesis) of the reduction's invariants."""
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
 import hypothesis
 import hypothesis.strategies as st
 import jax

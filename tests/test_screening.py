@@ -1,9 +1,9 @@
 """Gap-safe screening: safety (never discards true support) + effectiveness
 (at the optimum, discards almost everything inactive) + end-to-end exactness."""
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+
+from _hypothesis_compat import given, settings, st
 
 from repro.baselines import elastic_net_cd
 from repro.core.elastic_net import lambda1_max
