@@ -1,27 +1,36 @@
 """Benchmark harness — one module per paper table/figure plus framework
-micro-benches. Prints ``name,us_per_call,derived`` CSV lines.
+micro-benches. Prints ``name,us_per_call,derived`` CSV lines and writes the
+path-engine artifact ``BENCH_path.json`` (scan-vs-loop wall clock, trace
+counts, batch-vs-sequential speedup) whenever the ``path``/``batch`` benches
+run — CI smoke-checks the artifact on CPU.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only path,batch]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
+
+ARTIFACT = "BENCH_path.json"
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="fewer path points")
     ap.add_argument("--only", default="", help="comma list of module suffixes")
+    ap.add_argument("--artifact", default=ARTIFACT,
+                    help="where to write the path/batch JSON artifact")
     args = ap.parse_args()
 
-    from benchmarks import (bench_crossover, bench_distributed, bench_lm_smoke,
-                            bench_nggp, bench_path, bench_pggn,
+    from benchmarks import (bench_batch, bench_crossover, bench_distributed,
+                            bench_lm_smoke, bench_nggp, bench_path, bench_pggn,
                             bench_reduction_ops)
 
     mods = {
-        "path": bench_path.run,
+        "path": (lambda: bench_path.run(points=6)) if args.quick else bench_path.run,
+        "batch": (lambda: bench_batch.run(B=4)) if args.quick else bench_batch.run,
         "reduction_ops": bench_reduction_ops.run,
         "crossover": bench_crossover.run,
         "pggn": (lambda: bench_pggn.run(points=2)) if args.quick else bench_pggn.run,
@@ -32,13 +41,20 @@ def main() -> None:
     picked = [s for s in args.only.split(",") if s] or list(mods)
     print("name,us_per_call,derived")
     failures = 0
+    artifact: dict = {}
     for name in picked:
         try:
-            mods[name]()
+            out = mods[name]()
+            if name in ("path", "batch") and isinstance(out, dict):
+                artifact[name] = out
         except Exception:  # noqa: BLE001
             failures += 1
             print(f"{name},nan,ERROR", flush=True)
             traceback.print_exc()
+    if artifact:
+        with open(args.artifact, "w") as f:
+            json.dump(artifact, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.artifact}", flush=True)
     if failures:
         sys.exit(1)
 

@@ -45,6 +45,7 @@ def main():
         t0 = time.perf_counter()
         sol = sven(X, y, t, args.lam2, SvenConfig(tol=1e-8), warm_w=warm_w)
         sven_ms = (time.perf_counter() - t0) * 1e3
+        warm_w = sol.w
         dev = float(jnp.abs(sol.beta - beta_cd).max())
         nnz = int((jnp.abs(sol.beta) > 1e-8).sum())
         print(f"{frac:6.3f} {t:9.3f} {nnz:5d} {float(sol.kkt):9.2e} "

@@ -1,11 +1,21 @@
 """The paper's primary contribution: Elastic Net -> squared-hinge SVM (SVEN)."""
-from repro.core.sven import sven, sven_path, SvenConfig, SvenSolution
+from repro.core.sven import (
+    sven,
+    sven_path,
+    sven_path_reference,
+    SvenConfig,
+    SvenSolution,
+    trace_counts,
+    reset_trace_counts,
+)
+from repro.core.batch import SvenBatchSolution, cv_folds, en_grid, sven_batch
 from repro.core.reduction import (
     SvenOperator,
     build_svm_dataset,
     gram_blocks,
     gram_reference,
     recover_beta,
+    svm_C,
 )
 from repro.core import elastic_net
 from repro.core.screening import gap_safe_screen, sven_with_screening
@@ -13,13 +23,21 @@ from repro.core.screening import gap_safe_screen, sven_with_screening
 __all__ = [
     "sven",
     "sven_path",
+    "sven_path_reference",
+    "sven_batch",
+    "SvenBatchSolution",
+    "cv_folds",
+    "en_grid",
     "SvenConfig",
     "SvenSolution",
+    "trace_counts",
+    "reset_trace_counts",
     "SvenOperator",
     "build_svm_dataset",
     "gram_blocks",
     "gram_reference",
     "recover_beta",
+    "svm_C",
     "elastic_net",
     "gap_safe_screen",
     "sven_with_screening",

@@ -1,0 +1,128 @@
+"""Batched multi-problem SVEN solves — vmap over the jit-native engine.
+
+`sven_batch` stacks whole Elastic Net problems along a leading batch axis
+and runs the same `_sven_core` trace for all of them at once (DESIGN.md §6).
+Batching is where GPU/TPU SVM throughput actually comes from (cf. Rgtsvm,
+Wang et al. 2017): one fat executable instead of B thin dispatches. The
+three stacking patterns the serving layer needs all go through here:
+
+    multi-response     X (n, p) shared,  y (B, n)
+    (t, lambda2) grid  X, y shared,      t (B,), lambda2 (B,)   [en_grid]
+    k-fold CV          X (B, n_tr, p), y (B, n_tr)              [cv_folds]
+
+Any subset of {X, y, t, lambda2} may carry the batch axis; the rest
+broadcast. Under an active `repro.dist.mesh_context` the stacked inputs are
+placed with the rule table's "batch" axis before entering jit, so the
+compiled executable fans problems out across the data-parallel mesh axis —
+the same rules that shard LM training batches shard solver workloads.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro import dist
+from repro.core.sven import SvenArrays, SvenConfig, _bump_trace, _sven_core
+
+
+class SvenBatchSolution(NamedTuple):
+    """Stacked per-problem solutions; every field has a leading (B,) axis."""
+
+    beta: jax.Array           # (B, p)
+    alpha: jax.Array          # (B, 2p)
+    w: jax.Array              # (B, n)
+    iters: jax.Array          # (B,)
+    opt_residual: jax.Array   # (B,)
+    kkt: jax.Array            # (B,)
+
+
+@partial(jax.jit, static_argnames=("config", "axes"))
+def _sven_batch_jit(X, y, t, lambda2, config: SvenConfig, axes) -> SvenArrays:
+    _bump_trace("sven_batch")
+
+    def solve_one(X_, y_, t_, l2_):
+        return _sven_core(X_, y_, t_, l2_, None, None, config)
+
+    return jax.vmap(solve_one, in_axes=axes)(X, y, t, lambda2)
+
+
+def _maybe_shard_batch(arr: jax.Array, batched: bool) -> jax.Array:
+    """Place a stacked operand with the rule table's "batch" axis (dim 0)."""
+    ctx = dist.current_context()
+    if ctx is None or not batched:
+        return arr
+    mesh, rules = ctx
+    names = ("batch",) + (None,) * (arr.ndim - 1)
+    spec = dist.resolve_spec(names, arr.shape, mesh, rules)
+    return jax.device_put(arr, NamedSharding(mesh, spec))
+
+
+def sven_batch(
+    X: jax.Array,
+    y: jax.Array,
+    t,
+    lambda2,
+    config: SvenConfig = SvenConfig(),
+) -> SvenBatchSolution:
+    """Solve a stack of Elastic Net problems in one vmapped executable.
+
+    Batch-axis detection by rank: X (B, n, p) vs (n, p); y (B, n) vs (n,);
+    t / lambda2 (B,) vs scalar. At least one operand must be batched; all
+    batched operands must agree on B. Results match a Python loop of per-
+    problem `sven` calls to solver tolerance (tested).
+    """
+    X = jnp.asarray(X)
+    dtype = X.dtype
+    y = jnp.asarray(y, dtype)
+    t = jnp.asarray(t, dtype)
+    lambda2 = jnp.asarray(lambda2, dtype)
+
+    axes = (0 if X.ndim == 3 else None,
+            0 if y.ndim == 2 else None,
+            0 if t.ndim == 1 else None,
+            0 if lambda2.ndim == 1 else None)
+    operands = (X, y, t, lambda2)
+    sizes = {op.shape[0] for op, ax in zip(operands, axes) if ax == 0}
+    if not sizes:
+        raise ValueError("sven_batch: no batched operand (add a leading batch "
+                         "axis to X, y, t or lambda2, or call sven())")
+    if len(sizes) != 1:
+        raise ValueError(f"sven_batch: inconsistent batch sizes {sorted(sizes)}")
+
+    X, y, t, lambda2 = (_maybe_shard_batch(op, ax == 0)
+                        for op, ax in zip(operands, axes))
+    arrs = _sven_batch_jit(X, y, t, lambda2, config, axes)
+    return SvenBatchSolution(beta=arrs.beta, alpha=arrs.alpha, w=arrs.w,
+                             iters=arrs.iters, opt_residual=arrs.opt_residual,
+                             kkt=arrs.kkt)
+
+
+def en_grid(ts, lambda2s) -> Tuple[jax.Array, jax.Array]:
+    """Flatten a (t, lambda2) product grid into batched (B,) operand pairs."""
+    T, L = jnp.meshgrid(jnp.asarray(ts), jnp.asarray(lambda2s), indexing="ij")
+    return T.ravel(), L.ravel()
+
+
+def cv_folds(X: jax.Array, y: jax.Array, k: int):
+    """Stack k leave-one-fold-out problems for `sven_batch` (equal-size folds).
+
+    Uses the first k*(n//k) rows so every fold — and therefore every stacked
+    training problem — has the same shape (a vmap requirement). Returns
+    (X_train (k, n-f, p), y_train (k, n-f), X_val (k, f, p), y_val (k, f)).
+    """
+    n = X.shape[0]
+    if k < 2 or k > n:
+        raise ValueError(f"cv_folds: need 2 <= k <= n, got k={k}, n={n}")
+    fold = n // k
+    n_use = fold * k
+    X, y = X[:n_use], y[:n_use]
+    idx = jnp.arange(n_use)
+    val_idx = idx.reshape(k, fold)
+    train_idx = jnp.stack([
+        jnp.concatenate([idx[: i * fold], idx[(i + 1) * fold:]]) for i in range(k)
+    ])
+    return X[train_idx], y[train_idx], X[val_idx], y[val_idx]

@@ -192,7 +192,7 @@ def make_distributed_hessian_matvec(mesh: Mesh, X: jax.Array, y: jax.Array,
     p = X.shape[1]
     p_loc = p // n_dev
 
-    def local(X_loc, y_full, act, v):
+    def local(X_loc, y_full, act, v, C_op):
         rank = jax.lax.axis_index(axes)
         a_t = jax.lax.dynamic_slice_in_dim(act, rank * p_loc, p_loc)
         a_b = jax.lax.dynamic_slice_in_dim(act, p + rank * p_loc, p_loc)
@@ -204,14 +204,15 @@ def make_distributed_hessian_matvec(mesh: Mesh, X: jax.Array, y: jax.Array,
         e_loc = jnp.sum(u_b) - jnp.sum(u_t)
         partial_hv = X_loc @ d + (y_full / t) * e_loc     # (n,)
         hv = jax.lax.psum(partial_hv, axes)               # ONE all-reduce
-        return v + 2.0 * C * hv
+        return v + 2.0 * C_op * hv
 
     fn = shard_map(local, mesh=mesh,
-                   in_specs=(P(None, axes), P(), P(), P()),
+                   in_specs=(P(None, axes), P(), P(), P(), P()),
                    out_specs=P(), check_rep=False)
 
-    def hess_matvec(v, act):
-        return fn(X, y, act.astype(v.dtype), v)
+    def hess_matvec(v, act, C_traced=None):
+        C_op = C if C_traced is None else C_traced
+        return fn(X, y, act.astype(v.dtype), v, jnp.asarray(C_op, v.dtype))
 
     return hess_matvec
 
@@ -224,10 +225,10 @@ def sven_primal_distributed(mesh: Mesh, X: jax.Array, y: jax.Array, t: float,
     Note: the act-mask layout here is the canonical [all +, all -] ordering —
     the gradient/margin path computes on the replicated implicit operator
     while the O(np) Hessian mat-vecs (the hot loop) run feature-sharded."""
-    from repro.core.reduction import SvenOperator, recover_beta
+    from repro.core.reduction import SvenOperator, recover_beta, svm_C
 
     n, p = X.shape
-    C = 1.0 / (2.0 * max(lambda2, 1e-12))
+    C = svm_C(lambda2).astype(X.dtype)
     op = SvenOperator(X=X, y=y, t=t)
     yhat = jnp.concatenate([jnp.ones((p,), X.dtype), -jnp.ones((p,), X.dtype)])
     hess = make_distributed_hessian_matvec(mesh, X, y, t, C)

@@ -47,9 +47,19 @@ def build_svm_dataset(X: jax.Array, y: jax.Array, t: float) -> Tuple[jax.Array, 
     return Xhat, yhat
 
 
-def svm_C(lambda2: float) -> float:
-    """C = 1/(2 lambda2); capped for the Lasso limit lambda2 -> 0."""
-    return 1.0 / (2.0 * max(lambda2, 1e-12))
+#: Default Lasso-limit floor on lambda2 (C capped at 1/(2*floor)). The single
+#: source of truth for the clamp — SvenConfig.lambda2_floor defaults to it.
+LAMBDA2_FLOOR = 1e-12
+
+
+def svm_C(lambda2, floor: float = LAMBDA2_FLOOR) -> jax.Array:
+    """C = 1/(2 lambda2); capped for the Lasso limit lambda2 -> 0.
+
+    Accepts Python floats and traced scalars alike — the one clamping rule
+    used by both the explicit reduction and the sven() driver.
+    """
+    lam2 = jnp.maximum(jnp.asarray(lambda2, jnp.result_type(float, lambda2)), floor)
+    return 1.0 / (2.0 * lam2)
 
 
 def recover_beta(alpha: jax.Array, t: float) -> jax.Array:

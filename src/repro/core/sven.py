@@ -1,4 +1,4 @@
-"""SVEN driver — the paper's Algorithm 1 as a composable JAX module.
+"""SVEN driver — the paper's Algorithm 1 as a jit-native JAX engine.
 
 Dispatch (paper §3, "Implementation details"):
     2p > n  -> primal solver over w in R^n   (cost driven by n)
@@ -9,11 +9,22 @@ materializes the (2p, n) constructed dataset — the TPU-native path.
 `matrix_free=False` is the paper-faithful baseline (explicit Xnew, as the
 MATLAB listing does). Both return identical solutions (tested).
 
+Engine architecture (DESIGN.md §6): `t` and `lambda2` are *traced* scalars,
+so `sven()` compiles exactly once per (shape, dtype, warm-start structure,
+config) — sweeping the regularization surface never retraces. `sven_path`
+is a single jitted `lax.scan` over the t-grid that carries the warm dual
+alpha AND primal w through the scan; `sven_path_reference` keeps the
+host-side Python loop as the testable reference. `core/batch.py` vmaps the
+same core over stacked problems and `serve/engine.py` buckets live request
+queues onto these compiled executables. Trace counts are observable via
+`trace_counts()` — tests assert the compile-once property.
+
 The returned diagnostics make the solve auditable at scale: iteration counts,
 final KKT residuals of the *original* Elastic Net problem, and the objective.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from functools import partial
 from typing import NamedTuple, Optional
@@ -25,6 +36,37 @@ from repro.core import elastic_net as en
 from repro.core import reduction as red
 from repro.core.svm import solve_dual_fista, solve_dual_newton, solve_primal_newton
 
+# ---------------------------------------------------------------------------
+# Trace instrumentation: each jit-wrapped entry point bumps its counter ONCE
+# per trace (the bump runs at trace time, not at execution time). Tests and
+# benchmarks assert e.g. a 40-point path costs exactly one trace.
+# ---------------------------------------------------------------------------
+_TRACE_COUNTS: collections.Counter = collections.Counter()
+
+
+def _bump_trace(name: str) -> None:
+    _TRACE_COUNTS[name] += 1
+
+
+def trace_counts() -> dict:
+    """Snapshot of {entry_point: times_traced} since the last reset."""
+    return dict(_TRACE_COUNTS)
+
+
+def reset_trace_counts() -> None:
+    _TRACE_COUNTS.clear()
+
+
+class SvenArrays(NamedTuple):
+    """Arrays-only solve result — the jit/scan/vmap-safe core payload."""
+
+    beta: jax.Array
+    alpha: jax.Array
+    w: jax.Array              # primal iterate (dual mode: w = Zhat @ alpha)
+    iters: jax.Array
+    opt_residual: jax.Array
+    kkt: jax.Array
+
 
 class SvenSolution(NamedTuple):
     beta: jax.Array
@@ -33,6 +75,7 @@ class SvenSolution(NamedTuple):
     iters: jax.Array
     opt_residual: jax.Array   # solver's own optimality measure
     kkt: jax.Array            # Elastic Net KKT violation at beta
+    w: jax.Array              # primal SVM iterate — warm-start carrier
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,7 +89,7 @@ class SvenConfig:
     max_newton: int = 60
     cg_iters: int = 300
     kernel_cache_max_m: int = 8192   # cache K when 2p <= this
-    lambda2_floor: float = 1e-12     # Lasso limit: C capped at 1/(2*floor)
+    lambda2_floor: float = red.LAMBDA2_FLOOR  # Lasso limit: C capped at 1/(2*floor)
 
 
 def _pick_mode(n: int, p: int, cfg: SvenConfig) -> str:
@@ -55,20 +98,21 @@ def _pick_mode(n: int, p: int, cfg: SvenConfig) -> str:
     return "primal" if 2 * p > n else "dual"
 
 
-def sven(
+def _sven_core(
     X: jax.Array,
     y: jax.Array,
-    t: float,
-    lambda2: float,
-    config: SvenConfig = SvenConfig(),
-    *,
-    warm_alpha: Optional[jax.Array] = None,
-    warm_w: Optional[jax.Array] = None,
-) -> SvenSolution:
-    """Solve the Elastic Net (paper eq. 1) via the SVM reduction."""
+    t: jax.Array,
+    lambda2: jax.Array,
+    warm_alpha: Optional[jax.Array],
+    warm_w: Optional[jax.Array],
+    config: SvenConfig,
+) -> SvenArrays:
+    """Pure traced core: t/lambda2/warm starts are operands, config is static."""
     n, p = X.shape
     dtype = X.dtype
-    C = 1.0 / (2.0 * max(lambda2, config.lambda2_floor))
+    t = jnp.asarray(t, dtype)
+    lambda2 = jnp.asarray(lambda2, dtype)
+    C = red.svm_C(lambda2, floor=config.lambda2_floor).astype(dtype)
     mode = _pick_mode(n, p, config)
     op = red.SvenOperator(X=X, y=y, t=t)
 
@@ -84,10 +128,10 @@ def sven(
         if config.backend == "pallas":
             from repro.kernels.ops import hinge_hessian_matvec
 
-            def hess_matvec(v, act):  # noqa: F811 — Pallas fused H v
+            def hess_matvec(v, act, C_traced):  # noqa: F811 — Pallas fused H v
                 hv = hinge_hessian_matvec(
                     X.astype(jnp.float32), y.astype(jnp.float32),
-                    jnp.float32(t), jnp.float32(C),
+                    jnp.asarray(t, jnp.float32), jnp.asarray(C_traced, jnp.float32),
                     act[:p].astype(jnp.float32), act[p:].astype(jnp.float32),
                     v.astype(jnp.float32))
                 return hv.astype(dtype)
@@ -99,9 +143,9 @@ def sven(
         )
         alpha = C * jnp.maximum(1.0 - yhat * matvec(res.w), 0.0)  # Alg.1 line 7
         beta = red.recover_beta(alpha, t)
-        return SvenSolution(beta=beta, alpha=alpha, mode="primal", iters=res.iters,
-                            opt_residual=res.grad_norm,
-                            kkt=en.kkt_violation(X, y, beta, lambda2))
+        return SvenArrays(beta=beta, alpha=alpha, w=res.w, iters=res.iters,
+                          opt_residual=res.grad_norm,
+                          kkt=en.kkt_violation(X, y, beta, lambda2))
 
     # --- dual ---
     m = 2 * p
@@ -112,7 +156,7 @@ def sven(
         if config.backend == "pallas":
             from repro.kernels.ops import shifted_gram
             K = shifted_gram(X.astype(jnp.float32), y.astype(jnp.float32),
-                             jnp.float32(t)).astype(dtype)
+                             jnp.asarray(t, jnp.float32)).astype(dtype)
         elif config.matrix_free:
             K = red.gram_blocks(X, y, t)
         else:
@@ -124,31 +168,96 @@ def sven(
     solver = solve_dual_newton if config.solver == "newton" else solve_dual_fista
     res = solver(kernel_matvec, m, C, dtype=dtype, tol=config.tol, alpha0=warm_alpha)
     beta = red.recover_beta(res.alpha, t)
-    return SvenSolution(beta=beta, alpha=res.alpha, mode="dual", iters=res.iters,
-                        opt_residual=res.pg_norm,
-                        kkt=en.kkt_violation(X, y, beta, lambda2))
+    # w = Zhat @ alpha: the primal iterate this dual solution induces — carried
+    # so a following primal-mode solve (or the scan) can warm-start from it.
+    w = op.zhat_matvec(res.alpha)
+    return SvenArrays(beta=beta, alpha=res.alpha, w=w, iters=res.iters,
+                      opt_residual=res.pg_norm,
+                      kkt=en.kkt_violation(X, y, beta, lambda2))
+
+
+@partial(jax.jit, static_argnames=("config",))
+def _sven_jit(X, y, t, lambda2, warm_alpha, warm_w, config: SvenConfig) -> SvenArrays:
+    _bump_trace("sven")
+    return _sven_core(X, y, t, lambda2, warm_alpha, warm_w, config)
+
+
+def sven(
+    X: jax.Array,
+    y: jax.Array,
+    t,
+    lambda2,
+    config: SvenConfig = SvenConfig(),
+    *,
+    warm_alpha: Optional[jax.Array] = None,
+    warm_w: Optional[jax.Array] = None,
+) -> SvenSolution:
+    """Solve the Elastic Net (paper eq. 1) via the SVM reduction.
+
+    `t` and `lambda2` are jit operands: repeated calls at new regularization
+    settings on the same-shape problem reuse one compiled executable
+    (assertable via `trace_counts()["sven"]`).
+    """
+    arrs = _sven_jit(X, y, jnp.asarray(t, X.dtype), jnp.asarray(lambda2, X.dtype),
+                     warm_alpha, warm_w, config)
+    mode = _pick_mode(X.shape[0], X.shape[1], config)
+    return SvenSolution(beta=arrs.beta, alpha=arrs.alpha, mode=mode,
+                        iters=arrs.iters, opt_residual=arrs.opt_residual,
+                        kkt=arrs.kkt, w=arrs.w)
+
+
+@partial(jax.jit, static_argnames=("config",))
+def _sven_path_scan(X, y, ts, lambda2, config: SvenConfig) -> jax.Array:
+    _bump_trace("sven_path_scan")
+    n, p = X.shape
+    dtype = X.dtype
+
+    def body(carry, t):
+        warm_a, warm_w = carry
+        arrs = _sven_core(X, y, t, lambda2, warm_a, warm_w, config)
+        return (arrs.alpha, arrs.w), arrs.beta
+
+    carry0 = (jnp.zeros((2 * p,), dtype), jnp.zeros((n,), dtype))
+    _, betas = jax.lax.scan(body, carry0, ts)
+    return betas
 
 
 def sven_path(
     X: jax.Array,
     y: jax.Array,
-    ts: jax.Array,
-    lambda2: float,
+    ts,
+    lambda2,
     config: SvenConfig = SvenConfig(),
 ) -> jax.Array:
-    """Regularization path over an increasing grid of L1 budgets (Fig. 1).
+    """Regularization path over a grid of L1 budgets (Fig. 1), scan-compiled.
 
-    Warm-starts alpha (dual) / w (primal) across the grid — a beyond-paper
-    optimization (the paper solves each (t, lambda2) cold); typically cuts
-    total Newton iterations 2-4x along a 40-point path.
+    One `lax.scan` over the t-grid: the whole path is a single trace / single
+    executable (per grid *length*, not per grid *values*), and both warm
+    starts — the dual alpha and the primal w — are genuinely carried from
+    point to point. Warm-starting across the grid is a beyond-paper
+    optimization (the paper solves each (t, lambda2) cold); it typically cuts
+    total Newton iterations 2-4x along a 40-point path, and the scan removes
+    the per-point dispatch/retrace cost on top.
+
+    `sven_path_reference` is the host-side loop with identical warm-start
+    semantics; the two are tested equal to 1e-6.
     """
+    ts = jnp.asarray(ts, X.dtype)
+    return _sven_path_scan(X, y, ts, jnp.asarray(lambda2, X.dtype), config)
+
+
+def sven_path_reference(
+    X: jax.Array,
+    y: jax.Array,
+    ts,
+    lambda2,
+    config: SvenConfig = SvenConfig(),
+) -> jax.Array:
+    """Reference Python-loop path, warm-started like the scan (alpha AND w)."""
     betas = []
     warm_a, warm_w = None, None
     for t in list(ts):
         sol = sven(X, y, float(t), lambda2, config, warm_alpha=warm_a, warm_w=warm_w)
         betas.append(sol.beta)
-        if sol.mode == "dual":
-            warm_a = sol.alpha
-        # primal warm start: w is t-dependent through the data; alpha-based
-        # restarts are still effective since SV sets evolve slowly along the path.
+        warm_a, warm_w = sol.alpha, sol.w
     return jnp.stack(betas)

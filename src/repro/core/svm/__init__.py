@@ -1,8 +1,20 @@
-from repro.core.svm.primal_newton import solve_primal_newton, PrimalResult
-from repro.core.svm.dual_newton import solve_dual_newton, DualResult
-from repro.core.svm.dual_fista import solve_dual_fista
+from repro.core.svm.state import (Hyper, SolverMachine, SolverState,
+                                  make_hyper, run_machine)
+from repro.core.svm.primal_newton import (PrimalResult, primal_newton_machine,
+                                          solve_primal_newton)
+from repro.core.svm.dual_newton import (DualResult, dual_newton_machine,
+                                        solve_dual_newton)
+from repro.core.svm.dual_fista import dual_fista_machine, solve_dual_fista
 
 __all__ = [
+    "Hyper",
+    "SolverMachine",
+    "SolverState",
+    "make_hyper",
+    "run_machine",
+    "primal_newton_machine",
+    "dual_newton_machine",
+    "dual_fista_machine",
     "solve_primal_newton",
     "solve_dual_newton",
     "solve_dual_fista",

@@ -15,6 +15,10 @@ The kernel mat-vec is supplied as a callable: either `lambda v: K @ v` with a
 cached kernel matrix (the paper's d >> m regime — "remaining running time
 independent of the dimensionality") or the matrix-free O(np) SvenOperator
 product. All compute is matmul/matvec-shaped for MXU/BLAS execution.
+
+Expressed as a `SolverState` init/step/run machine (state.py, DESIGN.md §6)
+with traced (C, tol) so one trace serves scan-compiled paths and vmapped
+problem batches.
 """
 from __future__ import annotations
 
@@ -22,6 +26,9 @@ from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.svm.state import (Hyper, SolverMachine, SolverState,
+                                  initial_state, make_hyper, run_machine)
 
 
 class DualResult(NamedTuple):
@@ -31,7 +38,7 @@ class DualResult(NamedTuple):
     objective: jax.Array
 
 
-def _masked_cg(matvec: Callable, b: jax.Array, mask: jax.Array, maxiter: int, tol: float) -> jax.Array:
+def _masked_cg(matvec: Callable, b: jax.Array, mask: jax.Array, maxiter: int, tol) -> jax.Array:
     """CG restricted to coordinates where mask==1 (others pinned to 0)."""
 
     def mv(v):
@@ -59,36 +66,42 @@ def _masked_cg(matvec: Callable, b: jax.Array, mask: jax.Array, maxiter: int, to
     return x
 
 
-def solve_dual_newton(
+def _dual_obj(kernel_matvec, alpha, C):
+    two = jnp.asarray(2.0, alpha.dtype)
+    return (alpha @ kernel_matvec(alpha)
+            + (alpha @ alpha) / (two * C) - two * jnp.sum(alpha))
+
+
+def dual_newton_machine(
     kernel_matvec: Callable[[jax.Array], jax.Array],   # v (m,) -> K v (m,)
     m: int,
-    C: float,
     *,
     dtype=jnp.float64,
-    tol: float = 1e-8,
     max_newton: int = 100,
     cg_iters: int = 250,
-    alpha0: jax.Array | None = None,
-) -> DualResult:
-    C = jnp.asarray(C, dtype)
+) -> SolverMachine:
+    """Projected Newton as a SolverState machine; `hyper.C`/`hyper.tol` traced."""
     two = jnp.asarray(2.0, dtype)
 
-    def grad_fn(alpha):
+    def grad_fn(alpha, C):
         return two * kernel_matvec(alpha) + alpha / C - two
 
-    def obj_fn(alpha):
-        return alpha @ kernel_matvec(alpha) + (alpha @ alpha) / (two * C) - two * jnp.sum(alpha)
+    def init(hyper: Hyper, x0: jax.Array | None = None) -> SolverState:
+        del hyper
+        a0 = jnp.zeros((m,), dtype) if x0 is None else x0.astype(dtype)
+        return initial_state(a0)
 
-    def hess_mv(v):
-        return two * kernel_matvec(v) + v / C
-
-    def body(state):
-        alpha, it, _ = state
-        g = grad_fn(alpha)
+    def step(state: SolverState, hyper: Hyper) -> SolverState:
+        alpha, C = state.x, hyper.C
+        g = grad_fn(alpha, C)
         free = ((alpha > 0) | (g < 0)).astype(dtype)
-        d = _masked_cg(hess_mv, g, free, cg_iters, tol * 1e-2)
 
-        f0 = obj_fn(alpha)
+        def hess_mv(v):
+            return two * kernel_matvec(v) + v / C
+
+        d = _masked_cg(hess_mv, g, free, cg_iters, hyper.tol * 1e-2)
+
+        f0 = _dual_obj(kernel_matvec, alpha, C)
 
         def proj(s):
             return jnp.maximum(alpha - s * d, 0.0)
@@ -100,20 +113,40 @@ def solve_dual_newton(
         def ls_body(ls):
             s, _ = ls
             s = s * 0.5
-            return s, obj_fn(proj(s))
+            return s, _dual_obj(kernel_matvec, proj(s), C)
 
-        s, _ = jax.lax.while_loop(ls_cond, ls_body, (jnp.asarray(1.0, dtype), obj_fn(proj(1.0))))
+        s, _ = jax.lax.while_loop(
+            ls_cond, ls_body,
+            (jnp.asarray(1.0, dtype), _dual_obj(kernel_matvec, proj(1.0), C)))
         alpha_new = proj(s)
         # projected gradient: optimality measure for the bound-constrained QP
-        g_new = grad_fn(alpha_new)
-        pg = jnp.where(alpha_new > 0, g_new, jnp.minimum(g_new, 0.0))
-        return alpha_new, it + 1, jnp.max(jnp.abs(pg))
+        g_new = grad_fn(alpha_new, C)
+        pg = jnp.max(jnp.abs(jnp.where(alpha_new > 0, g_new, jnp.minimum(g_new, 0.0))))
+        # ~(> tol): NaN residual is terminal (diverged), not "keep iterating"
+        return SolverState(x=alpha_new, aux=state.aux, iters=state.iters + 1,
+                           residual=pg, converged=~(pg > hyper.tol))
 
-    def cond(state):
-        _, it, pg = state
-        return (pg > tol) & (it < max_newton)
+    def run(hyper: Hyper, x0: jax.Array | None = None) -> SolverState:
+        return run_machine(step, init(hyper, x0), hyper, max_newton)
 
-    a0 = jnp.zeros((m,), dtype) if alpha0 is None else alpha0.astype(dtype)
-    state = (a0, jnp.zeros((), jnp.int32), jnp.asarray(jnp.inf, dtype))
-    alpha, iters, pg = jax.lax.while_loop(cond, body, state)
-    return DualResult(alpha=alpha, iters=iters, pg_norm=pg, objective=obj_fn(alpha))
+    return SolverMachine(init=init, step=step, run=run)
+
+
+def solve_dual_newton(
+    kernel_matvec: Callable[[jax.Array], jax.Array],
+    m: int,
+    C,
+    *,
+    dtype=jnp.float64,
+    tol=1e-8,
+    max_newton: int = 100,
+    cg_iters: int = 250,
+    alpha0: jax.Array | None = None,
+) -> DualResult:
+    """Classic-signature wrapper over the machine (C/tol may be traced)."""
+    machine = dual_newton_machine(kernel_matvec, m, dtype=dtype,
+                                  max_newton=max_newton, cg_iters=cg_iters)
+    hyper = make_hyper(C, tol, dtype)
+    st = machine.run(hyper, alpha0)
+    return DualResult(alpha=st.x, iters=st.iters, pg_norm=st.residual,
+                      objective=_dual_obj(kernel_matvec, st.x, hyper.C))

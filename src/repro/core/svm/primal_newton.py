@@ -13,17 +13,22 @@ fixed SV set f is quadratic, so the method takes full steps near the
 solution and terminates in a handful of iterations — all heavy work is
 BLAS-3-shaped, which is the property the paper's GPU claim rests on.
 
-The solver is expressed entirely with jax.lax control flow so it jits and
-shards (the mat-vec callables may close over pjit-sharded arrays or
-shard_map collectives).
+The solver is a `SolverState` init/step/run machine (state.py, DESIGN.md
+§6): hyperparameters (C, tol) are traced scalars, the carry is fixed-shape,
+and everything is jax.lax control flow — so one trace serves a whole
+(t, lambda2) grid under `lax.scan` and stacked problems under `vmap`, and
+the mat-vec callables may close over pjit-sharded arrays or shard_map
+collectives.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.svm.state import (Hyper, SolverMachine, SolverState,
+                                  initial_state, make_hyper, run_machine)
 
 
 class PrimalResult(NamedTuple):
@@ -33,7 +38,7 @@ class PrimalResult(NamedTuple):
     objective: jax.Array
 
 
-def _cg(matvec: Callable, b: jax.Array, maxiter: int, tol: float) -> jax.Array:
+def _cg(matvec: Callable, b: jax.Array, maxiter: int, tol) -> jax.Array:
     """Plain CG on SPD `matvec`; fixed-shape while_loop, early exit on tol."""
 
     def body(state):
@@ -58,30 +63,37 @@ def _cg(matvec: Callable, b: jax.Array, maxiter: int, tol: float) -> jax.Array:
     return x
 
 
-def solve_primal_newton(
+def _primal_obj(matvec: Callable, yhat: jax.Array, w: jax.Array, C) -> jax.Array:
+    """f(w) = 1/2 ||w||^2 + C sum_i max(0, 1 - yhat_i (Xhat w)_i)^2."""
+    o = matvec(w)
+    act = (yhat * o) < 1.0
+    xi = jnp.where(act, 1.0 - yhat * o, 0.0)
+    return 0.5 * (w @ w) + C * (xi @ xi)
+
+
+def primal_newton_machine(
     matvec: Callable[[jax.Array], jax.Array],     # w (d,) -> Xhat @ w (m,)
     rmatvec: Callable[[jax.Array], jax.Array],    # v (m,) -> Xhat^T v (d,)
     yhat: jax.Array,                              # (m,) labels in {+1,-1}
-    C: float,
     d: int,
     *,
-    tol: float = 1e-8,
     max_newton: int = 50,
     cg_iters: int = 250,
-    w0: jax.Array | None = None,
-    hess_matvec: Callable | None = None,          # (v, act) -> H v override (Pallas path)
-) -> PrimalResult:
+    hess_matvec: Callable | None = None,          # (v, act, C) -> H v override (Pallas)
+) -> SolverMachine:
+    """Newton-CG as a SolverState machine; `hyper.C`/`hyper.tol` are traced."""
     dtype = yhat.dtype
-    C = jnp.asarray(C, dtype)
 
-    def f_value(w):
-        o = matvec(w)
-        act = (yhat * o) < 1.0
-        xi = jnp.where(act, 1.0 - yhat * o, 0.0)
-        return 0.5 * (w @ w) + C * (xi @ xi)
+    def f_value(w, C):
+        return _primal_obj(matvec, yhat, w, C)
 
-    def newton_body(state):
-        w, it, _ = state
+    def init(hyper: Hyper, x0: jax.Array | None = None) -> SolverState:
+        del hyper
+        w0 = jnp.zeros((d,), dtype) if x0 is None else x0.astype(dtype)
+        return initial_state(w0)
+
+    def step(state: SolverState, hyper: Hyper) -> SolverState:
+        w, C = state.x, hyper.C
         o = matvec(w)
         act = ((yhat * o) < 1.0).astype(dtype)
         grad = w + 2.0 * C * rmatvec(act * (o - yhat))
@@ -91,32 +103,55 @@ def solve_primal_newton(
                 return v + 2.0 * C * rmatvec(act * matvec(v))
         else:
             def hess_mv(v):
-                return hess_matvec(v, act)
+                return hess_matvec(v, act, C)
 
-        step = _cg(hess_mv, grad, cg_iters, tol * 1e-2)
+        dstep = _cg(hess_mv, grad, cg_iters, hyper.tol * 1e-2)
 
-        # Backtracking (Armijo) line search on f along -step.
-        f0 = f_value(w)
-        gd = grad @ step
+        # Backtracking (Armijo) line search on f along -dstep.
+        f0 = f_value(w, C)
+        gd = grad @ dstep
 
         def ls_body(ls):
             s, _ = ls
-            return s * 0.5, f_value(w - s * 0.5 * step)
+            return s * 0.5, f_value(w - s * 0.5 * dstep, C)
 
         def ls_cond(ls):
             s, fv = ls
             return (fv > f0 - 1e-4 * s * gd) & (s > 1e-10)
 
-        s, _ = jax.lax.while_loop(ls_cond, ls_body, (jnp.asarray(1.0, dtype), f_value(w - step)))
-        w_new = w - s * step
+        s, _ = jax.lax.while_loop(
+            ls_cond, ls_body, (jnp.asarray(1.0, dtype), f_value(w - dstep, C)))
         gnorm = jnp.max(jnp.abs(grad))
-        return w_new, it + 1, gnorm
+        # ~(> tol) rather than (<= tol): a NaN residual counts as terminal,
+        # so a diverged solve exits instead of spinning to max_iters.
+        return SolverState(x=w - s * dstep, aux=state.aux, iters=state.iters + 1,
+                           residual=gnorm, converged=~(gnorm > hyper.tol))
 
-    def newton_cond(state):
-        _, it, gnorm = state
-        return (gnorm > tol) & (it < max_newton)
+    def run(hyper: Hyper, x0: jax.Array | None = None) -> SolverState:
+        return run_machine(step, init(hyper, x0), hyper, max_newton)
 
-    w_init = jnp.zeros((d,), dtype) if w0 is None else w0.astype(dtype)
-    state = (w_init, jnp.zeros((), jnp.int32), jnp.asarray(jnp.inf, dtype))
-    w, iters, gnorm = jax.lax.while_loop(newton_cond, newton_body, state)
-    return PrimalResult(w=w, iters=iters, grad_norm=gnorm, objective=f_value(w))
+    return SolverMachine(init=init, step=step, run=run)
+
+
+def solve_primal_newton(
+    matvec: Callable[[jax.Array], jax.Array],
+    rmatvec: Callable[[jax.Array], jax.Array],
+    yhat: jax.Array,
+    C,
+    d: int,
+    *,
+    tol=1e-8,
+    max_newton: int = 50,
+    cg_iters: int = 250,
+    w0: jax.Array | None = None,
+    hess_matvec: Callable | None = None,
+) -> PrimalResult:
+    """Classic-signature wrapper over the machine (C/tol may be traced)."""
+    dtype = yhat.dtype
+    machine = primal_newton_machine(matvec, rmatvec, yhat, d,
+                                    max_newton=max_newton, cg_iters=cg_iters,
+                                    hess_matvec=hess_matvec)
+    hyper = make_hyper(C, tol, dtype)
+    st = machine.run(hyper, w0)
+    return PrimalResult(w=st.x, iters=st.iters, grad_norm=st.residual,
+                        objective=_primal_obj(matvec, yhat, st.x, hyper.C))

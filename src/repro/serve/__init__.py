@@ -1,3 +1,12 @@
-from repro.serve.engine import make_decode_step, make_prefill_step, greedy_generate
+from repro.serve.engine import (ElasticNetEngine, EngineStats, EnResult,
+                                greedy_generate, make_decode_step,
+                                make_prefill_step)
 
-__all__ = ["make_decode_step", "make_prefill_step", "greedy_generate"]
+__all__ = [
+    "ElasticNetEngine",
+    "EngineStats",
+    "EnResult",
+    "make_decode_step",
+    "make_prefill_step",
+    "greedy_generate",
+]

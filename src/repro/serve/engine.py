@@ -1,14 +1,31 @@
-"""Serving entry points: prefill_step / decode_step builders (the functions
-the dry-run lowers for prefill_32k / decode_32k / long_500k cells) and a
-simple batched greedy generation driver for the examples."""
+"""Serving entry points.
+
+LM side: prefill_step / decode_step builders (the functions the dry-run
+lowers for prefill_32k / decode_32k / long_500k cells) and a simple batched
+greedy generation driver for the examples.
+
+Elastic Net side: `ElasticNetEngine` — a shape-bucketed batch server that
+makes the paper's workload itself servable (DESIGN.md §6). Incoming
+(n, p) problems are padded up to a small ladder of power-of-two buckets, so
+arbitrary request shapes hit a bounded set of compiled executables; queued
+requests drain through `core.batch.sven_batch`, one vmapped solve per
+bucket. Padding is exact, not approximate: zero rows (with zero responses)
+add nothing to the Elastic Net objective, and zero columns provably carry
+beta_j = 0 through the SVM reduction, so the unpadded slice of the padded
+solution IS the original solution (tested against unpadded `sven`).
+"""
 from __future__ import annotations
 
+import dataclasses
+import time
 from functools import partial
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.batch import sven_batch
+from repro.core.sven import SvenConfig
 from repro.models import model as M
 
 
@@ -49,3 +66,163 @@ def greedy_generate(params, cfg: M.ModelConfig, batch: dict, *, steps: int,
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     outs.append(tok)
     return jnp.stack(outs, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Elastic Net serving: shape-bucketed batch engine over sven_batch
+# ---------------------------------------------------------------------------
+
+class EnResult(NamedTuple):
+    """Per-request solve result, unpadded back to the request's own p."""
+
+    beta: jax.Array           # (p,)
+    iters: jax.Array          # solver outer iterations (padded problem)
+    kkt: jax.Array            # EN KKT violation of the padded problem
+    bucket: tuple             # (n_bucket, p_bucket) executable this ran on
+
+
+@dataclasses.dataclass
+class EngineStats:
+    requests: int = 0
+    batches: int = 0          # sven_batch launches issued by drain()
+    bucket_shapes: int = 0    # distinct (n, p, B) executables compiled
+    padded_slots: int = 0     # batch slots occupied by padding problems
+    solve_seconds: float = 0.0
+
+
+class _Pending(NamedTuple):
+    req_id: int
+    X: jax.Array
+    y: jax.Array
+    t: float
+    lambda2: float
+
+
+def _ceil_pow2(v: int, floor: int) -> int:
+    b = floor
+    while b < v:
+        b *= 2
+    return b
+
+
+class ElasticNetEngine:
+    """Queue + bucket + drain server for Elastic Net solves.
+
+    `submit()` enqueues a problem and returns a request id; `drain()` groups
+    the queue by padded (n, p) bucket, stacks each group (batch dim padded to
+    a power of two, bounded by `max_batch`) and solves it with one
+    `sven_batch` call per chunk. Because t/lambda2 are traced operands and
+    shapes are bucketed, steady-state traffic runs entirely on cached
+    executables — `stats.bucket_shapes` counts the distinct shapes ever
+    compiled, which stays small and constant under load (tested).
+    """
+
+    def __init__(self, config: SvenConfig = SvenConfig(), *,
+                 max_batch: int = 64, min_n: int = 16, min_p: int = 8,
+                 dtype=jnp.float64):
+        if max_batch < 1 or min_n < 1 or min_p < 1:
+            raise ValueError(f"ElasticNetEngine: max_batch/min_n/min_p must be "
+                             f">= 1 (got {max_batch}/{min_n}/{min_p})")
+        self.config = config
+        self.max_batch = max_batch
+        self.min_n = min_n
+        self.min_p = min_p
+        self.dtype = dtype
+        self.stats = EngineStats()
+        self._queue: list[_Pending] = []
+        self._undelivered: dict = {}   # solved by solve() but not yet drained
+        self._next_id = 0
+        self._seen_shapes: set = set()
+
+    # -- request side ------------------------------------------------------
+
+    def submit(self, X, y, t: float, lambda2: float) -> int:
+        X = jnp.asarray(X, self.dtype)
+        y = jnp.asarray(y, self.dtype)
+        if X.ndim != 2 or y.shape != (X.shape[0],):
+            raise ValueError(f"submit: bad shapes X{X.shape} y{y.shape}")
+        if not (t > 0 and lambda2 >= 0):
+            raise ValueError(f"submit: need t > 0, lambda2 >= 0 (t={t}, lambda2={lambda2})")
+        req_id = self._next_id
+        self._next_id += 1
+        self._queue.append(_Pending(req_id, X, y, float(t), float(lambda2)))
+        self.stats.requests += 1
+        return req_id
+
+    def solve(self, X, y, t: float, lambda2: float) -> EnResult:
+        """Submit + drain a single request (convenience / interactive path).
+
+        Other pending requests ride along in the same drain; their results
+        are held and returned by the next `drain()` call, not lost.
+        """
+        req_id = self.submit(X, y, t, lambda2)
+        results = self.drain()
+        mine = results.pop(req_id)
+        self._undelivered.update(results)
+        return mine
+
+    # -- bucket side -------------------------------------------------------
+
+    def bucket_of(self, n: int, p: int) -> tuple:
+        return (_ceil_pow2(n, self.min_n), _ceil_pow2(p, self.min_p))
+
+    def _pad_problem(self, req: _Pending, bn: int, bp: int):
+        n, p = req.X.shape
+        X = jnp.pad(req.X, ((0, bn - n), (0, bp - p)))
+        y = jnp.pad(req.y, (0, bn - n))
+        return X, y
+
+    def _dummy_problem(self, bn: int, bp: int):
+        # Solved alongside real requests to fill the batch to a power of two;
+        # X = 0, y = 0 converges in O(1) solver iterations.
+        return jnp.zeros((bn, bp), self.dtype), jnp.zeros((bn,), self.dtype)
+
+    # -- drain side --------------------------------------------------------
+
+    def drain(self) -> dict:
+        """Solve everything queued; returns {request_id: EnResult}, including
+        any results a previous `solve()` drained but did not deliver."""
+        queue, self._queue = self._queue, []
+        groups: dict = {}
+        for req in queue:
+            groups.setdefault(self.bucket_of(*req.X.shape), []).append(req)
+
+        results, self._undelivered = self._undelivered, {}
+        done_ids: set = set()
+        try:
+            for (bn, bp), reqs in sorted(groups.items()):
+                for lo in range(0, len(reqs), self.max_batch):
+                    chunk = reqs[lo:lo + self.max_batch]
+                    self._drain_chunk(bn, bp, chunk, results)
+                    done_ids.update(r.req_id for r in chunk)
+        except Exception:
+            # A failed chunk must not lose the rest of the queue or results
+            # already held: re-queue unsolved requests, re-stash solved ones.
+            self._queue = [r for g in groups.values() for r in g
+                           if r.req_id not in done_ids] + self._queue
+            self._undelivered.update(results)
+            raise
+        return results
+
+    def _drain_chunk(self, bn: int, bp: int, reqs: list, results: dict) -> None:
+        b_real = len(reqs)
+        b_pad = min(_ceil_pow2(b_real, 1), self.max_batch)
+        padded = [self._pad_problem(r, bn, bp) for r in reqs]
+        padded += [self._dummy_problem(bn, bp)] * (b_pad - b_real)
+        Xb = jnp.stack([x for x, _ in padded])
+        yb = jnp.stack([y for _, y in padded])
+        tb = jnp.asarray([r.t for r in reqs] + [1.0] * (b_pad - b_real), self.dtype)
+        l2b = jnp.asarray([r.lambda2 for r in reqs] + [1.0] * (b_pad - b_real), self.dtype)
+
+        t0 = time.perf_counter()
+        sol = jax.block_until_ready(sven_batch(Xb, yb, tb, l2b, self.config))
+        self.stats.solve_seconds += time.perf_counter() - t0
+        self.stats.batches += 1
+        self.stats.padded_slots += b_pad - b_real
+        self._seen_shapes.add((bn, bp, b_pad))
+        self.stats.bucket_shapes = len(self._seen_shapes)
+
+        for i, req in enumerate(reqs):
+            p = req.X.shape[1]
+            results[req.req_id] = EnResult(beta=sol.beta[i, :p], iters=sol.iters[i],
+                                           kkt=sol.kkt[i], bucket=(bn, bp))

@@ -6,6 +6,7 @@ import numpy as np
 from _hypothesis_compat import given, settings, st
 
 from repro.baselines import elastic_net_cd
+from repro.core import sven
 from repro.core.elastic_net import lambda1_max
 from repro.core.screening import gap_safe_screen, sven_with_screening
 from repro.data.synthetic import make_regression
@@ -37,6 +38,32 @@ def test_screening_tight_at_optimum():
     # at the optimum the gap ~ 0 so the rule keeps ~ the support only
     assert int(scr.n_kept) <= max(2 * n_support, n_support + 5)
     assert float(scr.gap) < 1e-6
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 300), st.sampled_from(["exact", "crude", "none"]),
+       st.floats(0.2, 0.5), st.floats(0.3, 3.0))
+def test_screened_beta_matches_unscreened_sven(seed, warm_kind, l1_frac, lam2):
+    """Scatter-back property: the screened-then-solved beta equals the
+    UNSCREENED sven() beta (not just the CD baseline) — for every warm-start
+    choice the driver supports, and with exact zeros on discarded columns."""
+    X, y, _ = make_regression(36, 100, k_true=6, seed=seed)
+    l1 = l1_frac * float(lambda1_max(X, y))
+    beta_star = elastic_net_cd(X, y, l1, lam2).beta
+    t = float(jnp.sum(jnp.abs(beta_star)))
+    if t <= 1e-8:
+        return  # degenerate draw: empty model, nothing to screen
+    from repro.baselines.fista import elastic_net_fista
+    warm = {"exact": beta_star,
+            "crude": elastic_net_fista(X, y, l1, lam2, max_iters=40).beta,
+            "none": None}[warm_kind]
+    beta_scr, _, scr = sven_with_screening(X, y, t, lam2, warm_beta=warm)
+    beta_full = sven(X, y, t, lam2).beta
+    np.testing.assert_allclose(np.asarray(beta_scr), np.asarray(beta_full),
+                               atol=1e-6)
+    dropped = ~np.asarray(scr.keep)
+    assert (np.asarray(beta_scr)[dropped] == 0.0).all(), \
+        "scatter-back left a nonzero in a screened-out coordinate"
 
 
 def test_sven_with_screening_exact():
