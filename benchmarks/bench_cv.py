@@ -1,0 +1,70 @@
+"""CV throughput: the batched (fold x lambda) scan — one compiled executable
+driving K warm-started solver machines in lockstep — against the glmnet-shaped
+sequential per-fold loop, plus refit parity against the coordinate-descent
+baseline at the selected lambda. Returns a dict that benchmarks/run.py
+serializes into BENCH_path.json (CI smoke-checks the schema)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.baselines import elastic_net_cd
+from repro.core import cross_validate, cross_validate_reference, cv_folds
+from repro.core import reset_trace_counts, trace_counts
+from repro.core.api import PathConfig, _enet_path_scan, lambda_grid
+from repro.core.cv import _enet_cv_scan
+from repro.data.synthetic import make_regression
+
+
+def run(k: int = 5, n_lambdas: int = 16) -> dict:
+    # make_regression output is already standardized/centered, so the raw
+    # paper-scaled problem is what both CV drivers and CD see.
+    X, y, _ = make_regression(120, 32, k_true=8, rho=0.4, seed=11)
+    kw = dict(k=k, n_lambdas=n_lambdas, lambda2=1.0,
+              standardize=False, fit_intercept=False)
+
+    reset_trace_counts()
+    res = cross_validate(X, y, **kw)
+    traces = trace_counts()
+
+    # apples-to-apples fold batching: the (fold x lambda) scan as ONE vmapped
+    # executable vs the glmnet-shaped per-fold dispatch loop (both jit-warm,
+    # same splits/grid; selection + refit excluded from both sides)
+    cfg = PathConfig()
+    grid = lambda_grid(X, y, n_lambdas=n_lambdas)
+    Xtr, ytr, Xva, yva = cv_folds(X, y, k)
+    t_batched = time_call(
+        lambda: _enet_cv_scan(Xtr, ytr, Xva, yva, grid, 1.0, cfg))
+
+    def per_fold_loop():
+        return [_enet_path_scan(Xtr[i], ytr[i], grid, 1.0, cfg).beta
+                for i in range(k)]
+
+    t_seq = time_call(per_fold_loop)
+
+    _, mse_ref = cross_validate_reference(X, y, **kw)
+    mse_dev = float(jnp.max(jnp.abs(res.mse_path - mse_ref)))
+    beta_cd = elastic_net_cd(X, y, res.lambda_min, 1.0).beta
+    cd_dev = float(jnp.max(jnp.abs(res.beta - beta_cd)))
+
+    emit("cv_batched_vs_sequential", t_batched,
+         f"k={k} L={n_lambdas} seq={t_seq*1e6:.1f}us "
+         f"speedup={t_seq / max(t_batched, 1e-12):.2f}x "
+         f"max_dev_vs_cd={cd_dev:.2e}")
+
+    return {
+        "k": k,
+        "n_lambdas": n_lambdas,
+        "cv_batched_seconds": t_batched,
+        "cv_sequential_seconds": t_seq,
+        "cv_batched_vs_sequential_speedup": t_seq / max(t_batched, 1e-12),
+        "max_dev_vs_cd": cd_dev,
+        "mse_dev_vs_reference": mse_dev,
+        "cv_scan_traces": traces.get("enet_cv_scan", 0),
+        "refit_traces": traces.get("enet", 0),
+        "lambda_min": float(res.lambda_min),
+    }
+
+
+if __name__ == "__main__":
+    print(run())

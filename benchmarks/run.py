@@ -1,10 +1,11 @@
 """Benchmark harness — one module per paper table/figure plus framework
 micro-benches. Prints ``name,us_per_call,derived`` CSV lines and writes the
 path-engine artifact ``BENCH_path.json`` (scan-vs-loop wall clock, trace
-counts, batch-vs-sequential speedup) whenever the ``path``/``batch`` benches
-run — CI smoke-checks the artifact on CPU.
+counts, batch-vs-sequential speedup, CV throughput) whenever the
+``path``/``batch``/``cv`` benches run — CI validates the artifact schema on
+CPU via ``benchmarks/validate_artifact.py``.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick] [--only path,batch]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only path,batch,cv]
 """
 from __future__ import annotations
 
@@ -24,13 +25,14 @@ def main() -> None:
                     help="where to write the path/batch JSON artifact")
     args = ap.parse_args()
 
-    from benchmarks import (bench_batch, bench_crossover, bench_distributed,
-                            bench_lm_smoke, bench_nggp, bench_path, bench_pggn,
-                            bench_reduction_ops)
+    from benchmarks import (bench_batch, bench_crossover, bench_cv,
+                            bench_distributed, bench_lm_smoke, bench_nggp,
+                            bench_path, bench_pggn, bench_reduction_ops)
 
     mods = {
         "path": (lambda: bench_path.run(points=6)) if args.quick else bench_path.run,
         "batch": (lambda: bench_batch.run(B=4)) if args.quick else bench_batch.run,
+        "cv": (lambda: bench_cv.run(k=4, n_lambdas=8)) if args.quick else bench_cv.run,
         "reduction_ops": bench_reduction_ops.run,
         "crossover": bench_crossover.run,
         "pggn": (lambda: bench_pggn.run(points=2)) if args.quick else bench_pggn.run,
@@ -45,7 +47,7 @@ def main() -> None:
     for name in picked:
         try:
             out = mods[name]()
-            if name in ("path", "batch") and isinstance(out, dict):
+            if name in ("path", "batch", "cv") and isinstance(out, dict):
                 artifact[name] = out
         except Exception:  # noqa: BLE001
             failures += 1

@@ -1,0 +1,82 @@
+"""Validate the BENCH_path.json artifact emitted by ``benchmarks/run.py``.
+
+Checks both shape (every section the path/batch/cv benches write carries its
+full key set) and the engine invariants CI cares about: single-trace scans,
+no retrace on new grid values, and exactness vs the sequential / coordinate-
+descent oracles.
+
+    python benchmarks/validate_artifact.py [BENCH_path.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+REQUIRED_KEYS = {
+    "path": {
+        "n_points", "scan_seconds", "loop_seconds", "scan_vs_loop_speedup",
+        "scan_trace_count", "retraced_on_new_grid_values", "max_dev_vs_cd",
+        "scan_vs_loop_dev",
+    },
+    "batch": {
+        "grid_B", "batch_seconds", "sequential_seconds",
+        "batch_vs_sequential_speedup", "max_dev_vs_sequential",
+        "cv_folds_seconds",
+    },
+    "cv": {
+        "k", "n_lambdas", "cv_batched_seconds", "cv_sequential_seconds",
+        "cv_batched_vs_sequential_speedup", "max_dev_vs_cd",
+        "mse_dev_vs_reference", "cv_scan_traces", "refit_traces", "lambda_min",
+    },
+}
+
+
+def validate(artifact: dict) -> list:
+    errors = []
+    for section, keys in REQUIRED_KEYS.items():
+        if section not in artifact:
+            errors.append(f"missing section {section!r}")
+            continue
+        missing = keys - set(artifact[section])
+        if missing:
+            errors.append(f"{section}: missing keys {sorted(missing)}")
+
+    def check(section, cond, msg):
+        if section in artifact and not cond:
+            errors.append(f"{section}: {msg} ({artifact[section]})")
+
+    path, batch, cv = (artifact.get(s, {}) for s in ("path", "batch", "cv"))
+    check("path", path.get("scan_trace_count") == 1,
+          "regularization-path scan must compile exactly once")
+    check("path", not path.get("retraced_on_new_grid_values"),
+          "new grid values must not retrace the scan")
+    check("path", path.get("scan_vs_loop_dev", 1.0) < 1e-6,
+          "scan and reference loop diverged")
+    check("batch", batch.get("max_dev_vs_sequential", 1.0) < 1e-6,
+          "batched solves diverged from sequential sven()")
+    check("cv", cv.get("cv_scan_traces") == 1,
+          "screening-fused CV scan must compile exactly once")
+    check("cv", cv.get("refit_traces", 99) <= 1,
+          "CV refit must cost at most one extra trace")
+    check("cv", cv.get("max_dev_vs_cd", 1.0) < 1e-5,
+          "CV refit diverged from the coordinate-descent baseline")
+    check("cv", cv.get("mse_dev_vs_reference", 1.0) < 1e-8,
+          "batched CV MSE surface diverged from the per-fold loop")
+    return errors
+
+
+def main() -> None:
+    fname = sys.argv[1] if len(sys.argv) > 1 else "BENCH_path.json"
+    artifact = json.load(open(fname))
+    errors = validate(artifact)
+    if errors:
+        for e in errors:
+            print(f"[validate_artifact] FAIL: {e}")
+        sys.exit(1)
+    print(f"[validate_artifact] {fname} OK: "
+          f"path scan {artifact['path']['scan_vs_loop_speedup']:.2f}x, "
+          f"cv batched {artifact['cv']['cv_batched_vs_sequential_speedup']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,4 +1,13 @@
-"""The paper's primary contribution: Elastic Net -> squared-hinge SVM (SVEN)."""
+"""The paper's primary contribution: Elastic Net -> squared-hinge SVM (SVEN).
+
+Three tiers live here (DESIGN.md §6-§7):
+  - constrained engine: `sven`/`sven_path`/`sven_batch` solve the paper's
+    (t, lambda2) form, jit-native with optional gap-safe `keep` masks;
+  - screening: `gap_safe_screen` + `sven_with_screening`;
+  - glmnet-parity front-end: penalized (lambda1, lambda2) entry points
+    (`enet`, `enet_path`, `lambda_grid`, scaling conversions), sklearn-style
+    `ElasticNet`/`ElasticNetCV` estimators and batched `cross_validate`.
+"""
 from repro.core.sven import (
     sven,
     sven_path,
@@ -19,6 +28,27 @@ from repro.core.reduction import (
 )
 from repro.core import elastic_net
 from repro.core.screening import gap_safe_screen, sven_with_screening
+from repro.core.api import (
+    ElasticNet,
+    EnetPath,
+    EnetResult,
+    PathConfig,
+    enet,
+    enet_batch,
+    enet_path,
+    lambda_grid,
+    penalized_from_glmnet,
+    penalized_from_sklearn,
+    penalized_to_glmnet,
+    standardize_fit,
+    unscale_coef,
+)
+from repro.core.cv import (
+    CVResult,
+    ElasticNetCV,
+    cross_validate,
+    cross_validate_reference,
+)
 
 __all__ = [
     "sven",
@@ -41,4 +71,22 @@ __all__ = [
     "elastic_net",
     "gap_safe_screen",
     "sven_with_screening",
+    # glmnet-parity penalized front-end (core/api.py, core/cv.py)
+    "ElasticNet",
+    "ElasticNetCV",
+    "EnetPath",
+    "EnetResult",
+    "PathConfig",
+    "CVResult",
+    "enet",
+    "enet_batch",
+    "enet_path",
+    "lambda_grid",
+    "penalized_from_glmnet",
+    "penalized_from_sklearn",
+    "penalized_to_glmnet",
+    "standardize_fit",
+    "unscale_coef",
+    "cross_validate",
+    "cross_validate_reference",
 ]

@@ -41,13 +41,13 @@ class SvenBatchSolution(NamedTuple):
 
 
 @partial(jax.jit, static_argnames=("config", "axes"))
-def _sven_batch_jit(X, y, t, lambda2, config: SvenConfig, axes) -> SvenArrays:
+def _sven_batch_jit(X, y, t, lambda2, keep, config: SvenConfig, axes) -> SvenArrays:
     _bump_trace("sven_batch")
 
-    def solve_one(X_, y_, t_, l2_):
-        return _sven_core(X_, y_, t_, l2_, None, None, config)
+    def solve_one(X_, y_, t_, l2_, keep_):
+        return _sven_core(X_, y_, t_, l2_, None, None, config, keep_)
 
-    return jax.vmap(solve_one, in_axes=axes)(X, y, t, lambda2)
+    return jax.vmap(solve_one, in_axes=axes)(X, y, t, lambda2, keep)
 
 
 def _maybe_shard_batch(arr: jax.Array, batched: bool) -> jax.Array:
@@ -67,25 +67,31 @@ def sven_batch(
     t,
     lambda2,
     config: SvenConfig = SvenConfig(),
+    *,
+    keep: jax.Array | None = None,
 ) -> SvenBatchSolution:
     """Solve a stack of Elastic Net problems in one vmapped executable.
 
     Batch-axis detection by rank: X (B, n, p) vs (n, p); y (B, n) vs (n,);
-    t / lambda2 (B,) vs scalar. At least one operand must be batched; all
-    batched operands must agree on B. Results match a Python loop of per-
-    problem `sven` calls to solver tolerance (tested).
+    t / lambda2 (B,) vs scalar; optional screening mask keep (B, p) vs (p,)
+    (see `sven`'s keep). At least one operand must be batched; all batched
+    operands must agree on B. Results match a Python loop of per-problem
+    `sven` calls to solver tolerance (tested).
     """
     X = jnp.asarray(X)
     dtype = X.dtype
     y = jnp.asarray(y, dtype)
     t = jnp.asarray(t, dtype)
     lambda2 = jnp.asarray(lambda2, dtype)
+    if keep is not None:
+        keep = jnp.asarray(keep)
 
     axes = (0 if X.ndim == 3 else None,
             0 if y.ndim == 2 else None,
             0 if t.ndim == 1 else None,
-            0 if lambda2.ndim == 1 else None)
-    operands = (X, y, t, lambda2)
+            0 if lambda2.ndim == 1 else None,
+            0 if keep is not None and keep.ndim == 2 else None)
+    operands = (X, y, t, lambda2, keep)
     sizes = {op.shape[0] for op, ax in zip(operands, axes) if ax == 0}
     if not sizes:
         raise ValueError("sven_batch: no batched operand (add a leading batch "
@@ -94,8 +100,8 @@ def sven_batch(
         raise ValueError(f"sven_batch: inconsistent batch sizes {sorted(sizes)}")
 
     X, y, t, lambda2 = (_maybe_shard_batch(op, ax == 0)
-                        for op, ax in zip(operands, axes))
-    arrs = _sven_batch_jit(X, y, t, lambda2, config, axes)
+                        for op, ax in zip(operands[:4], axes[:4]))
+    arrs = _sven_batch_jit(X, y, t, lambda2, keep, config, axes)
     return SvenBatchSolution(beta=arrs.beta, alpha=arrs.alpha, w=arrs.w,
                              iters=arrs.iters, opt_residual=arrs.opt_residual,
                              kkt=arrs.kkt)

@@ -1,0 +1,164 @@
+"""Batched K-fold cross-validation for the penalized Elastic Net (DESIGN.md §7).
+
+glmnet's `cv.glmnet` loops folds sequentially; here the K held-out training
+problems are stacked through `core.batch.cv_folds` and the whole (lambda
+grid x fold) surface runs as ONE jitted `lax.scan` over the grid whose body
+vmaps the screening-fused penalized point solver (`core.api._enet_point`)
+over the fold axis — K solver machines advance in lockstep, each carrying
+its own warm (beta, alpha, w, t, nu) state down the path. Under an active
+`repro.dist.mesh_context` the fold axis is exactly the "batch" axis the rule
+table shards, so CV fans out across the data-parallel mesh like any other
+batched workload.
+
+`cross_validate` selects lambda by mean held-out MSE and refits on the full
+data: the entire driver costs exactly two traces — `enet_cv_scan` (the CV
+surface) + `enet` (the refit) — asserted via `trace_counts()` in tests.
+`cross_validate_reference` keeps the glmnet-style sequential per-fold loop
+as the testable reference (identical fold splits, identical grid).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import api
+from repro.core.batch import cv_folds
+from repro.core.sven import _bump_trace
+
+
+@partial(jax.jit, static_argnames=("config",))
+def _enet_cv_scan(Xtr, ytr, Xva, yva, lambda1s, lambda2,
+                  config: api.PathConfig):
+    """(L,) grid scan of a (k,)-fold vmap; returns per-point CV diagnostics."""
+    _bump_trace("enet_cv_scan")
+
+    init = jax.vmap(api.cold_carry)(Xtr, ytr)
+
+    def body(carry, lam1):
+        def one(Xf, yf, cf):
+            return api._enet_point(Xf, yf, lam1, lambda2, cf, config)
+
+        carry2, pts = jax.vmap(one)(Xtr, ytr, carry)
+        resid = jnp.einsum("kif,kf->ki", Xva, pts.beta) - yva
+        mse = jnp.mean(resid * resid, axis=1)          # (k,)
+        return carry2, (mse, pts.n_kept, pts.evals)
+
+    _, (mse, n_kept, evals) = jax.lax.scan(body, init, lambda1s)
+    return mse, n_kept, evals                          # each (L, k)
+
+
+class CVResult(NamedTuple):
+    lambda1s: jax.Array     # (L,) descending grid
+    lambda2: float
+    mse_path: jax.Array     # (L, k) held-out MSE per grid point and fold
+    mean_mse: jax.Array     # (L,)
+    lambda_min: float       # grid point minimizing mean CV MSE
+    index_min: int
+    beta: jax.Array         # (p,) full-data refit at lambda_min (orig scale)
+    intercept: jax.Array
+    n_kept: jax.Array       # (L, k) screened problem sizes
+    evals: jax.Array        # (L, k) SVEN solves per (lambda, fold)
+
+
+def cross_validate(X, y, *, k: int = 5, lambda1s=None, n_lambdas: int = 40,
+                   eps: Optional[float] = None, lambda2=1.0,
+                   standardize: bool = True, fit_intercept: bool = True,
+                   config: api.PathConfig = api.PathConfig()) -> CVResult:
+    """K-fold CV over the lambda grid, batched across folds; refit at the min.
+
+    Standardization statistics and the grid are computed once on the full
+    data (so every fold sees the same grid, as cv.glmnet does); held-out MSE
+    is measured in the centered space, which equals original-space MSE
+    because the scaler is global.
+    """
+    X = jnp.asarray(X)
+    y = jnp.asarray(y, X.dtype)
+    Xs, ys, scaler = api.standardize_fit(X, y, standardize=standardize,
+                                         fit_intercept=fit_intercept)
+    if lambda1s is None:
+        lambda1s = api.lambda_grid(Xs, ys, n_lambdas=n_lambdas, eps=eps)
+    lambda1s = jnp.asarray(lambda1s, X.dtype)
+    lam2 = jnp.asarray(lambda2, X.dtype)
+
+    Xtr, ytr, Xva, yva = cv_folds(Xs, ys, k)
+    mse, n_kept, evals = _enet_cv_scan(Xtr, ytr, Xva, yva, lambda1s, lam2,
+                                       config)
+    mean_mse = jnp.mean(mse, axis=1)
+    i_min = int(jnp.argmin(mean_mse))
+    lambda_min = float(lambda1s[i_min])
+
+    _, pt = api._enet_jit(Xs, ys, jnp.asarray(lambda_min, X.dtype), lam2,
+                          api.cold_carry(Xs, ys), config)
+    beta, intercept = api.unscale_coef(pt.beta, scaler)
+    return CVResult(lambda1s=lambda1s, lambda2=float(lambda2), mse_path=mse,
+                    mean_mse=mean_mse, lambda_min=lambda_min, index_min=i_min,
+                    beta=beta, intercept=intercept, n_kept=n_kept, evals=evals)
+
+
+def cross_validate_reference(X, y, *, k: int = 5, lambda1s=None,
+                             n_lambdas: int = 40, eps: Optional[float] = None,
+                             lambda2=1.0, standardize: bool = True,
+                             fit_intercept: bool = True,
+                             config: api.PathConfig = api.PathConfig()):
+    """Sequential per-fold loop (cv.glmnet's shape): the batched CV's oracle.
+
+    Same splits, same full-data grid and scaler; each fold runs its own
+    `_enet_path_scan`. Returns (lambda1s, mse_path (L, k)).
+    """
+    X = jnp.asarray(X)
+    y = jnp.asarray(y, X.dtype)
+    Xs, ys, _ = api.standardize_fit(X, y, standardize=standardize,
+                                    fit_intercept=fit_intercept)
+    if lambda1s is None:
+        lambda1s = api.lambda_grid(Xs, ys, n_lambdas=n_lambdas, eps=eps)
+    lambda1s = jnp.asarray(lambda1s, X.dtype)
+    lam2 = jnp.asarray(lambda2, X.dtype)
+
+    Xtr, ytr, Xva, yva = cv_folds(Xs, ys, k)
+    cols = []
+    for i in range(k):
+        pts = api._enet_path_scan(Xtr[i], ytr[i], lambda1s, lam2, config)
+        resid = pts.beta @ Xva[i].T - yva[i][None, :]   # (L, fold)
+        cols.append(jnp.mean(resid * resid, axis=1))
+    return lambda1s, jnp.stack(cols, axis=1)
+
+
+class ElasticNetCV:
+    """sklearn-style K-fold CV estimator over the batched SVEN front-end.
+
+    After `fit`: `coef_`, `intercept_`, `lambda_min_`, `lambda1s_`,
+    `mse_path_` (L, k), `mean_mse_`.
+    """
+
+    def __init__(self, k: int = 5, n_lambdas: int = 40,
+                 eps: Optional[float] = None, lambda2: float = 1.0, *,
+                 standardize: bool = True, fit_intercept: bool = True,
+                 config: api.PathConfig = api.PathConfig()):
+        self.k = k
+        self.n_lambdas = n_lambdas
+        self.eps = eps
+        self.lambda2 = lambda2
+        self.standardize = standardize
+        self.fit_intercept = fit_intercept
+        self.config = config
+
+    def fit(self, X, y):
+        res = cross_validate(X, y, k=self.k, n_lambdas=self.n_lambdas,
+                             eps=self.eps, lambda2=self.lambda2,
+                             standardize=self.standardize,
+                             fit_intercept=self.fit_intercept,
+                             config=self.config)
+        self.coef_ = res.beta
+        self.intercept_ = res.intercept
+        self.lambda_min_ = res.lambda_min
+        self.lambda1s_ = res.lambda1s
+        self.mse_path_ = res.mse_path
+        self.mean_mse_ = res.mean_mse
+        self.cv_result_ = res
+        return self
+
+    def predict(self, X):
+        return jnp.asarray(X) @ self.coef_ + self.intercept_

@@ -19,6 +19,14 @@ same core over stacked problems and `serve/engine.py` buckets live request
 queues onto these compiled executables. Trace counts are observable via
 `trace_counts()` — tests assert the compile-once property.
 
+Gap-safe screening (`core/screening.py`) plugs in through the optional
+`keep` mask: a (p,) boolean operand that zeroes provably-inactive columns
+and scatters their coefficients back as exact zeros — fixed shapes, so the
+compile-once property survives. The glmnet-parity penalized front-end
+(`core/api.py`: lambda grids, `enet_path`, estimators; `core/cv.py`:
+batched `ElasticNetCV`) drives this core through the `t = |beta*|_1`
+penalized<->constrained equivalence (DESIGN.md §7).
+
 The returned diagnostics make the solve auditable at scale: iteration counts,
 final KKT residuals of the *original* Elastic Net problem, and the objective.
 """
@@ -106,12 +114,30 @@ def _sven_core(
     warm_alpha: Optional[jax.Array],
     warm_w: Optional[jax.Array],
     config: SvenConfig,
+    keep: Optional[jax.Array] = None,
 ) -> SvenArrays:
-    """Pure traced core: t/lambda2/warm starts are operands, config is static."""
+    """Pure traced core: t/lambda2/warm starts are operands, config is static.
+
+    `keep` is an optional (p,) screening mask (e.g. from `gap_safe_screen`):
+    masked columns are zeroed — a fixed-shape form of feature screening that
+    survives jit/scan/vmap — and the returned beta is scattered back to exact
+    zeros on the discarded coordinates. Because a zero column provably carries
+    beta_j = 0 through the reduction (see serve/engine.py padding argument),
+    a *safe* mask leaves the solution unchanged.
+    """
     n, p = X.shape
     dtype = X.dtype
     t = jnp.asarray(t, dtype)
     lambda2 = jnp.asarray(lambda2, dtype)
+    X_full = X    # KKT diagnostics stay on the ORIGINAL problem: an unsafe
+    keepf = None  # mask must show up as a large kkt, not pass trivially
+    if keep is not None:
+        keepf = keep.astype(dtype)
+        X = X * keepf[None, :]
+        if warm_alpha is not None:
+            # symmetrize masked duplicate pairs so dual warm starts can't
+            # leave stale asymmetric mass on screened-out samples
+            warm_alpha = warm_alpha * jnp.concatenate([keepf, keepf])
     C = red.svm_C(lambda2, floor=config.lambda2_floor).astype(dtype)
     mode = _pick_mode(n, p, config)
     op = red.SvenOperator(X=X, y=y, t=t)
@@ -143,9 +169,11 @@ def _sven_core(
         )
         alpha = C * jnp.maximum(1.0 - yhat * matvec(res.w), 0.0)  # Alg.1 line 7
         beta = red.recover_beta(alpha, t)
+        if keepf is not None:
+            beta = beta * keepf
         return SvenArrays(beta=beta, alpha=alpha, w=res.w, iters=res.iters,
                           opt_residual=res.grad_norm,
-                          kkt=en.kkt_violation(X, y, beta, lambda2))
+                          kkt=en.kkt_violation(X_full, y, beta, lambda2))
 
     # --- dual ---
     m = 2 * p
@@ -168,18 +196,20 @@ def _sven_core(
     solver = solve_dual_newton if config.solver == "newton" else solve_dual_fista
     res = solver(kernel_matvec, m, C, dtype=dtype, tol=config.tol, alpha0=warm_alpha)
     beta = red.recover_beta(res.alpha, t)
+    if keepf is not None:
+        beta = beta * keepf
     # w = Zhat @ alpha: the primal iterate this dual solution induces — carried
     # so a following primal-mode solve (or the scan) can warm-start from it.
     w = op.zhat_matvec(res.alpha)
     return SvenArrays(beta=beta, alpha=res.alpha, w=w, iters=res.iters,
                       opt_residual=res.pg_norm,
-                      kkt=en.kkt_violation(X, y, beta, lambda2))
+                      kkt=en.kkt_violation(X_full, y, beta, lambda2))
 
 
 @partial(jax.jit, static_argnames=("config",))
-def _sven_jit(X, y, t, lambda2, warm_alpha, warm_w, config: SvenConfig) -> SvenArrays:
+def _sven_jit(X, y, t, lambda2, warm_alpha, warm_w, keep, config: SvenConfig) -> SvenArrays:
     _bump_trace("sven")
-    return _sven_core(X, y, t, lambda2, warm_alpha, warm_w, config)
+    return _sven_core(X, y, t, lambda2, warm_alpha, warm_w, config, keep)
 
 
 def sven(
@@ -191,15 +221,21 @@ def sven(
     *,
     warm_alpha: Optional[jax.Array] = None,
     warm_w: Optional[jax.Array] = None,
+    keep: Optional[jax.Array] = None,
 ) -> SvenSolution:
     """Solve the Elastic Net (paper eq. 1) via the SVM reduction.
 
     `t` and `lambda2` are jit operands: repeated calls at new regularization
     settings on the same-shape problem reuse one compiled executable
     (assertable via `trace_counts()["sven"]`).
+
+    `keep` is an optional (p,) safe screening mask (see `core/screening.py`
+    and the penalized front-end in `core/api.py`): screened-out columns are
+    zeroed and their coefficients scattered back as exact zeros, without
+    changing the compiled shape.
     """
     arrs = _sven_jit(X, y, jnp.asarray(t, X.dtype), jnp.asarray(lambda2, X.dtype),
-                     warm_alpha, warm_w, config)
+                     warm_alpha, warm_w, keep, config)
     mode = _pick_mode(X.shape[0], X.shape[1], config)
     return SvenSolution(beta=arrs.beta, alpha=arrs.alpha, mode=mode,
                         iters=arrs.iters, opt_residual=arrs.opt_residual,

@@ -1,6 +1,8 @@
 """Elastic Net serving launcher: drive ElasticNetEngine with a synthetic
 request stream of varied shapes and report batched-vs-sequential throughput,
 bucket/executable reuse, and exactness vs direct per-request solves.
+`--penalized N` mixes N glmnet-style (lambda1, lambda2) requests per wave
+into the stream; those are verified against the coordinate-descent baseline.
 
     PYTHONPATH=src python -m repro.launch.serve_en --requests 24 --waves 3
 """
@@ -15,7 +17,9 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import SvenConfig, sven
+from repro.baselines import elastic_net_cd
+from repro.core import SvenConfig, enet, sven
+from repro.core.elastic_net import lambda1_max
 from repro.data.synthetic import make_regression
 from repro.serve import ElasticNetEngine
 
@@ -34,6 +38,20 @@ def _random_requests(rng: np.random.Generator, count: int):
     return reqs
 
 
+def _random_penalized(rng: np.random.Generator, count: int):
+    """Penalized-form requests: lambda1 drawn as a fraction of lambda1_max."""
+    reqs = []
+    for _ in range(count):
+        n = int(rng.integers(20, 90))
+        p = int(rng.integers(10, 120))
+        X, y, _ = make_regression(n, p, k_true=max(3, p // 8),
+                                  rho=0.3, seed=int(rng.integers(1 << 30)))
+        lam1 = float(rng.uniform(0.1, 0.6)) * float(lambda1_max(X, y))
+        lam2 = float(rng.choice([0.5, 1.0, 2.0]))
+        reqs.append((X, y, lam1, lam2))
+    return reqs
+
+
 def run(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=24, help="requests per wave")
@@ -41,6 +59,9 @@ def run(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--verify", type=int, default=4,
                     help="requests per wave cross-checked against direct sven()")
+    ap.add_argument("--penalized", type=int, default=2,
+                    help="additional glmnet-form requests per wave "
+                         "(verified against coordinate descent)")
     args = ap.parse_args(argv)
 
     rng = np.random.default_rng(args.seed)
@@ -54,31 +75,44 @@ def run(argv=None):
         padded0 = engine.stats.padded_slots
         reqs = _random_requests(rng, args.requests)
         ids = [engine.submit(*r) for r in reqs]
+        pen_reqs = _random_penalized(rng, args.penalized)
+        pen_ids = [engine.submit_penalized(*r) for r in pen_reqs]
         t0 = time.perf_counter()
         out = engine.drain()
         batched_s = time.perf_counter() - t0
 
-        # sequential baseline: one engine-less sven() per request (jit-cached
-        # per raw shape — the dispatch pattern the engine replaces)
+        # sequential baseline: one engine-less solve per request (jit-cached
+        # per raw shape — the dispatch pattern the engine replaces), covering
+        # BOTH request forms so the speedup compares equal work
         t0 = time.perf_counter()
         seq = [jax.block_until_ready(sven(X, y, t, l2, cfg).beta)
                for X, y, t, l2 in reqs]
+        seq_pen = [jax.block_until_ready(enet(X, y, l1, l2).beta)
+                   for X, y, l1, l2 in pen_reqs]
         sequential_s = time.perf_counter() - t0
 
         max_dev = 0.0
         for i in range(min(args.verify, len(reqs))):
             max_dev = max(max_dev, float(jnp.abs(out[ids[i]].beta - seq[i]).max()))
 
+        pen_dev = 0.0
+        for (X, y, lam1, lam2), rid, sp in zip(pen_reqs, pen_ids, seq_pen):
+            beta_cd = elastic_net_cd(X, y, lam1, lam2).beta
+            pen_dev = max(pen_dev,
+                          float(jnp.abs(out[rid].beta - beta_cd).max()),
+                          float(jnp.abs(out[rid].beta - sp).max()))
+
         s = engine.stats
         new_execs_last_wave = s.bucket_shapes - execs0
-        print(f"[serve_en] wave {wave}: {len(reqs)} reqs in "
+        print(f"[serve_en] wave {wave}: {len(reqs)}+{len(pen_reqs)}pen reqs in "
               f"{s.batches - batches0} batches | "
               f"batched {batched_s*1e3:7.1f} ms  sequential {sequential_s*1e3:7.1f} ms "
               f"({sequential_s/max(batched_s,1e-9):4.1f}x) | "
               f"new_executables={new_execs_last_wave} "
               f"padded_slots={s.padded_slots - padded0} | "
-              f"max|beta-beta_seq|={max_dev:.2e}")
+              f"max|beta-beta_seq|={max_dev:.2e} pen_dev={pen_dev:.2e}")
         assert max_dev < 1e-6, "engine diverged from direct sven()"
+        assert pen_dev < 1e-5, "penalized path diverged from coordinate descent"
 
     steady = ("last wave added none" if new_execs_last_wave == 0
               else f"last wave still added {new_execs_last_wave}")

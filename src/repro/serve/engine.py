@@ -13,6 +13,13 @@ bucket. Padding is exact, not approximate: zero rows (with zero responses)
 add nothing to the Elastic Net objective, and zero columns provably carry
 beta_j = 0 through the SVM reduction, so the unpadded slice of the padded
 solution IS the original solution (tested against unpadded `sven`).
+
+The engine speaks both of the paper's problem forms: `submit` takes the
+constrained (t, lambda2) and `submit_penalized` the glmnet-style
+(lambda1, lambda2); penalized requests drain in their own buckets through
+`core.api.enet_batch` (the vmapped multiplier root-find, DESIGN.md §7) and
+the same padding argument applies — zero columns are screened/zeroed and
+the dummy batch-fill problems (X = 0) short-circuit to beta = 0.
 """
 from __future__ import annotations
 
@@ -24,6 +31,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.api import PathConfig, enet_batch
 from repro.core.batch import sven_batch
 from repro.core.sven import SvenConfig
 from repro.models import model as M
@@ -85,7 +93,7 @@ class EnResult(NamedTuple):
 class EngineStats:
     requests: int = 0
     batches: int = 0          # sven_batch launches issued by drain()
-    bucket_shapes: int = 0    # distinct (n, p, B) executables compiled
+    bucket_shapes: int = 0    # distinct (n, p, B, form) executables compiled
     padded_slots: int = 0     # batch slots occupied by padding problems
     solve_seconds: float = 0.0
 
@@ -94,8 +102,9 @@ class _Pending(NamedTuple):
     req_id: int
     X: jax.Array
     y: jax.Array
-    t: float
+    t: float              # constrained form: L1 budget; penalized: unused
     lambda2: float
+    lambda1: Optional[float] = None   # set => penalized-form request
 
 
 def _ceil_pow2(v: int, floor: int) -> int:
@@ -118,12 +127,14 @@ class ElasticNetEngine:
     """
 
     def __init__(self, config: SvenConfig = SvenConfig(), *,
+                 path_config: PathConfig = PathConfig(),
                  max_batch: int = 64, min_n: int = 16, min_p: int = 8,
                  dtype=jnp.float64):
         if max_batch < 1 or min_n < 1 or min_p < 1:
             raise ValueError(f"ElasticNetEngine: max_batch/min_n/min_p must be "
                              f">= 1 (got {max_batch}/{min_n}/{min_p})")
         self.config = config
+        self.path_config = path_config
         self.max_batch = max_batch
         self.min_n = min_n
         self.min_p = min_p
@@ -146,6 +157,27 @@ class ElasticNetEngine:
         req_id = self._next_id
         self._next_id += 1
         self._queue.append(_Pending(req_id, X, y, float(t), float(lambda2)))
+        self.stats.requests += 1
+        return req_id
+
+    def submit_penalized(self, X, y, lambda1: float, lambda2: float) -> int:
+        """Enqueue a glmnet-style penalized request (DESIGN.md §7 front-end).
+
+        Penalized requests bucket and pad exactly like constrained ones but
+        drain through `core.api.enet_batch` — the vmapped multiplier
+        root-find that maps (lambda1, lambda2) onto the constrained engine.
+        """
+        X = jnp.asarray(X, self.dtype)
+        y = jnp.asarray(y, self.dtype)
+        if X.ndim != 2 or y.shape != (X.shape[0],):
+            raise ValueError(f"submit_penalized: bad shapes X{X.shape} y{y.shape}")
+        if not (lambda1 > 0 and lambda2 >= 0):
+            raise ValueError(f"submit_penalized: need lambda1 > 0, lambda2 >= 0 "
+                             f"(lambda1={lambda1}, lambda2={lambda2})")
+        req_id = self._next_id
+        self._next_id += 1
+        self._queue.append(_Pending(req_id, X, y, 0.0, float(lambda2),
+                                    lambda1=float(lambda1)))
         self.stats.requests += 1
         return req_id
 
@@ -185,15 +217,16 @@ class ElasticNetEngine:
         queue, self._queue = self._queue, []
         groups: dict = {}
         for req in queue:
-            groups.setdefault(self.bucket_of(*req.X.shape), []).append(req)
+            key = (self.bucket_of(*req.X.shape), req.lambda1 is not None)
+            groups.setdefault(key, []).append(req)
 
         results, self._undelivered = self._undelivered, {}
         done_ids: set = set()
         try:
-            for (bn, bp), reqs in sorted(groups.items()):
+            for ((bn, bp), pen), reqs in sorted(groups.items()):
                 for lo in range(0, len(reqs), self.max_batch):
                     chunk = reqs[lo:lo + self.max_batch]
-                    self._drain_chunk(bn, bp, chunk, results)
+                    self._drain_chunk(bn, bp, chunk, results, pen)
                     done_ids.update(r.req_id for r in chunk)
         except Exception:
             # A failed chunk must not lose the rest of the queue or results
@@ -204,25 +237,34 @@ class ElasticNetEngine:
             raise
         return results
 
-    def _drain_chunk(self, bn: int, bp: int, reqs: list, results: dict) -> None:
+    def _drain_chunk(self, bn: int, bp: int, reqs: list, results: dict,
+                     pen: bool = False) -> None:
         b_real = len(reqs)
         b_pad = min(_ceil_pow2(b_real, 1), self.max_batch)
         padded = [self._pad_problem(r, bn, bp) for r in reqs]
         padded += [self._dummy_problem(bn, bp)] * (b_pad - b_real)
         Xb = jnp.stack([x for x, _ in padded])
         yb = jnp.stack([y for _, y in padded])
-        tb = jnp.asarray([r.t for r in reqs] + [1.0] * (b_pad - b_real), self.dtype)
-        l2b = jnp.asarray([r.lambda2 for r in reqs] + [1.0] * (b_pad - b_real), self.dtype)
+        fill = [1.0] * (b_pad - b_real)
+        l2b = jnp.asarray([r.lambda2 for r in reqs] + fill, self.dtype)
 
         t0 = time.perf_counter()
-        sol = jax.block_until_ready(sven_batch(Xb, yb, tb, l2b, self.config))
+        if pen:
+            l1b = jnp.asarray([r.lambda1 for r in reqs] + fill, self.dtype)
+            pts = jax.block_until_ready(
+                enet_batch(Xb, yb, l1b, l2b, self.path_config))
+            betas, iters, kkts = pts.beta, pts.sven_iters, pts.kkt
+        else:
+            tb = jnp.asarray([r.t for r in reqs] + fill, self.dtype)
+            sol = jax.block_until_ready(sven_batch(Xb, yb, tb, l2b, self.config))
+            betas, iters, kkts = sol.beta, sol.iters, sol.kkt
         self.stats.solve_seconds += time.perf_counter() - t0
         self.stats.batches += 1
         self.stats.padded_slots += b_pad - b_real
-        self._seen_shapes.add((bn, bp, b_pad))
+        self._seen_shapes.add((bn, bp, b_pad, pen))
         self.stats.bucket_shapes = len(self._seen_shapes)
 
         for i, req in enumerate(reqs):
             p = req.X.shape[1]
-            results[req.req_id] = EnResult(beta=sol.beta[i, :p], iters=sol.iters[i],
-                                           kkt=sol.kkt[i], bucket=(bn, bp))
+            results[req.req_id] = EnResult(beta=betas[i, :p], iters=iters[i],
+                                           kkt=kkts[i], bucket=(bn, bp))
