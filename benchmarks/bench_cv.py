@@ -1,18 +1,27 @@
-"""CV throughput: the batched (fold x lambda) scan — one compiled executable
-driving K warm-started solver machines in lockstep — against the glmnet-shaped
-sequential per-fold loop, plus refit parity against the coordinate-descent
-baseline at the selected lambda. Returns a dict that benchmarks/run.py
-serializes into BENCH_path.json (CI smoke-checks the schema)."""
+"""CV throughput: the fold-chunked (fold x lambda) scan — one compiled
+executable driving the fold machines — against the glmnet-shaped sequential
+per-fold dispatch loop, plus refit parity against the coordinate-descent
+baseline at the selected lambda.
+
+The fold chunk is right-sized per backend (`core.cv._auto_fold_chunk`): on a
+single CPU device the k-wide vmap advances every fold at the MAX trip count
+of its nested while_loops (Illinois x Newton x CG lockstep) and ran ~0.6x
+the sequential loop; chunk=1 keeps the whole surface in ONE executable with
+no lockstep and beats the host loop, which is what ships in the artifact —
+`validate_artifact.py` flags any speedup < 1. The full-width vmap is still
+timed (`cv_vmap_seconds`) to track the lockstep cost the accelerator path
+trades against. Returns a dict that benchmarks/run.py serializes into
+BENCH_path.json (CI smoke-checks the schema)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_call
+from benchmarks.common import emit, time_call, time_interleaved
 from repro.baselines import elastic_net_cd
 from repro.core import cross_validate, cross_validate_reference, cv_folds
 from repro.core import reset_trace_counts, trace_counts
 from repro.core.api import PathConfig, _enet_path_scan, lambda_grid
-from repro.core.cv import _enet_cv_scan
+from repro.core.cv import _auto_fold_chunk, _enet_cv_scan
 from repro.data.synthetic import make_regression
 
 
@@ -27,20 +36,27 @@ def run(k: int = 5, n_lambdas: int = 16) -> dict:
     res = cross_validate(X, y, **kw)
     traces = trace_counts()
 
-    # apples-to-apples fold batching: the (fold x lambda) scan as ONE vmapped
-    # executable vs the glmnet-shaped per-fold dispatch loop (both jit-warm,
-    # same splits/grid; selection + refit excluded from both sides)
+    # apples-to-apples fold batching: the auto-chunked (fold x lambda) scan
+    # as ONE executable vs the glmnet-shaped per-fold dispatch loop (both
+    # jit-warm, same splits/grid; selection + refit excluded from both)
     cfg = PathConfig()
+    chunk = _auto_fold_chunk(k)
     grid = lambda_grid(X, y, n_lambdas=n_lambdas)
     Xtr, ytr, Xva, yva = cv_folds(X, y, k)
-    t_batched = time_call(
-        lambda: _enet_cv_scan(Xtr, ytr, Xva, yva, grid, 1.0, cfg))
+    def batched_scan():
+        return _enet_cv_scan(Xtr, ytr, Xva, yva, grid, 1.0, cfg, chunk)
 
     def per_fold_loop():
         return [_enet_path_scan(Xtr[i], ytr[i], grid, 1.0, cfg).beta
                 for i in range(k)]
 
-    t_seq = time_call(per_fold_loop)
+    # the chunked-vs-loop margin is real but ~1.1-1.3x on CPU, so the two
+    # sides are timed INTERLEAVED (alternating reps, best-of-8 each): they
+    # see the same machine state, keeping drift and scheduler noise off the
+    # speedup >= 1 gate in validate_artifact.py
+    t_batched, t_seq = time_interleaved(batched_scan, per_fold_loop, reps=8)
+    t_vmap = time_call(
+        lambda: _enet_cv_scan(Xtr, ytr, Xva, yva, grid, 1.0, cfg, k))
 
     _, mse_ref = cross_validate_reference(X, y, **kw)
     mse_dev = float(jnp.max(jnp.abs(res.mse_path - mse_ref)))
@@ -48,14 +64,17 @@ def run(k: int = 5, n_lambdas: int = 16) -> dict:
     cd_dev = float(jnp.max(jnp.abs(res.beta - beta_cd)))
 
     emit("cv_batched_vs_sequential", t_batched,
-         f"k={k} L={n_lambdas} seq={t_seq*1e6:.1f}us "
+         f"k={k} L={n_lambdas} chunk={chunk} seq={t_seq*1e6:.1f}us "
+         f"vmap={t_vmap*1e6:.1f}us "
          f"speedup={t_seq / max(t_batched, 1e-12):.2f}x "
          f"max_dev_vs_cd={cd_dev:.2e}")
 
     return {
         "k": k,
         "n_lambdas": n_lambdas,
+        "fold_chunk": chunk,
         "cv_batched_seconds": t_batched,
+        "cv_vmap_seconds": t_vmap,
         "cv_sequential_seconds": t_seq,
         "cv_batched_vs_sequential_speedup": t_seq / max(t_batched, 1e-12),
         "max_dev_vs_cd": cd_dev,

@@ -26,6 +26,29 @@ def time_call(fn, *args, reps: int = 3, **kw) -> float:
     return best
 
 
+def time_interleaved(fn_a, fn_b, reps: int = 8):
+    """Best-of wall times for two rivals measured in ALTERNATING reps.
+
+    Interleaving makes both sides sample the same machine state (thermal
+    drift, background load), which matters when the artifact gates on their
+    ratio and the true margin is tens of percent.
+    """
+    block = lambda out: jax.tree.map(
+        lambda x: x.block_until_ready() if hasattr(x, "block_until_ready")
+        else x, out)
+    block(fn_a())
+    block(fn_b())
+    best_a = best_b = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        block(fn_a())
+        best_a = min(best_a, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        block(fn_b())
+        best_b = min(best_b, time.perf_counter() - t0)
+    return best_a, best_b
+
+
 def emit(name: str, seconds: float, derived: str):
     print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
 

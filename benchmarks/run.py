@@ -1,11 +1,13 @@
 """Benchmark harness — one module per paper table/figure plus framework
 micro-benches. Prints ``name,us_per_call,derived`` CSV lines and writes the
 path-engine artifact ``BENCH_path.json`` (scan-vs-loop wall clock, trace
-counts, batch-vs-sequential speedup, CV throughput) whenever the
-``path``/``batch``/``cv`` benches run — CI validates the artifact schema on
-CPU via ``benchmarks/validate_artifact.py``.
+counts, batch-vs-sequential speedup, CV throughput, serving runtime
+latency/throughput) whenever the ``path``/``batch``/``cv``/``serve``
+benches run — CI validates the artifact schema on CPU via
+``benchmarks/validate_artifact.py``.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick] [--only path,batch,cv]
+    PYTHONPATH=src python -m benchmarks.run [--quick] \
+        [--only path,batch,cv,serve]
 """
 from __future__ import annotations
 
@@ -27,12 +29,15 @@ def main() -> None:
 
     from benchmarks import (bench_batch, bench_crossover, bench_cv,
                             bench_distributed, bench_lm_smoke, bench_nggp,
-                            bench_path, bench_pggn, bench_reduction_ops)
+                            bench_path, bench_pggn, bench_reduction_ops,
+                            bench_serve)
 
     mods = {
         "path": (lambda: bench_path.run(points=6)) if args.quick else bench_path.run,
         "batch": (lambda: bench_batch.run(B=4)) if args.quick else bench_batch.run,
         "cv": (lambda: bench_cv.run(k=4, n_lambdas=8)) if args.quick else bench_cv.run,
+        "serve": ((lambda: bench_serve.run(requests=24, reps=2))
+                  if args.quick else bench_serve.run),
         "reduction_ops": bench_reduction_ops.run,
         "crossover": bench_crossover.run,
         "pggn": (lambda: bench_pggn.run(points=2)) if args.quick else bench_pggn.run,
@@ -47,7 +52,7 @@ def main() -> None:
     for name in picked:
         try:
             out = mods[name]()
-            if name in ("path", "batch", "cv") and isinstance(out, dict):
+            if name in ("path", "batch", "cv", "serve") and isinstance(out, dict):
                 artifact[name] = out
         except Exception:  # noqa: BLE001
             failures += 1

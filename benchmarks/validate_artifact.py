@@ -1,9 +1,12 @@
 """Validate the BENCH_path.json artifact emitted by ``benchmarks/run.py``.
 
-Checks both shape (every section the path/batch/cv benches write carries its
-full key set) and the engine invariants CI cares about: single-trace scans,
-no retrace on new grid values, and exactness vs the sequential / coordinate-
-descent oracles.
+Checks both shape (every section the path/batch/cv/serve benches write
+carries its full key set) and the engine invariants CI cares about:
+single-trace scans, no retrace on new grid values (incl. steady-state
+serving), exactness vs the sequential / coordinate-descent oracles, batched
+CV at least matching the sequential loop, and the continuous-batching
+runtime sustaining >= 2x the synchronous drain_reference throughput with
+warm-start cache hits under the adjacent-lambda load.
 
     python benchmarks/validate_artifact.py [BENCH_path.json]
 """
@@ -24,9 +27,17 @@ REQUIRED_KEYS = {
         "cv_folds_seconds",
     },
     "cv": {
-        "k", "n_lambdas", "cv_batched_seconds", "cv_sequential_seconds",
+        "k", "n_lambdas", "fold_chunk", "cv_batched_seconds",
+        "cv_vmap_seconds", "cv_sequential_seconds",
         "cv_batched_vs_sequential_speedup", "max_dev_vs_cd",
         "mse_dev_vs_reference", "cv_scan_traces", "refit_traces", "lambda_min",
+    },
+    "serve": {
+        "n_requests", "concurrency", "runtime_seconds", "reference_seconds",
+        "runtime_req_per_s", "reference_req_per_s", "throughput_vs_reference",
+        "p50_latency_s", "p99_latency_s", "cache_hit_rate", "cache_hits",
+        "steady_state_trace_count", "steady_state_traces_constant",
+        "bucket_executables", "max_dev_vs_direct",
     },
 }
 
@@ -45,7 +56,8 @@ def validate(artifact: dict) -> list:
         if section in artifact and not cond:
             errors.append(f"{section}: {msg} ({artifact[section]})")
 
-    path, batch, cv = (artifact.get(s, {}) for s in ("path", "batch", "cv"))
+    path, batch, cv, serve = (artifact.get(s, {})
+                              for s in ("path", "batch", "cv", "serve"))
     check("path", path.get("scan_trace_count") == 1,
           "regularization-path scan must compile exactly once")
     check("path", not path.get("retraced_on_new_grid_values"),
@@ -62,6 +74,18 @@ def validate(artifact: dict) -> list:
           "CV refit diverged from the coordinate-descent baseline")
     check("cv", cv.get("mse_dev_vs_reference", 1.0) < 1e-8,
           "batched CV MSE surface diverged from the per-fold loop")
+    check("cv", cv.get("cv_batched_vs_sequential_speedup", 0.0) >= 1.0,
+          "batched CV slower than the sequential per-fold loop — the fold "
+          "chunk is wrong-sized for this backend")
+    check("serve", serve.get("throughput_vs_reference", 0.0) >= 2.0,
+          "continuous-batching runtime below 2x the synchronous "
+          "drain_reference throughput")
+    check("serve", serve.get("cache_hits", 0) > 0,
+          "adjacent-lambda load produced no warm-start cache hits")
+    check("serve", serve.get("steady_state_traces_constant") is True,
+          "steady-state serving retraced")
+    check("serve", serve.get("max_dev_vs_direct", 1.0) < 1e-6,
+          "runtime solves diverged from direct sven()/enet()")
     return errors
 
 
@@ -75,7 +99,9 @@ def main() -> None:
         sys.exit(1)
     print(f"[validate_artifact] {fname} OK: "
           f"path scan {artifact['path']['scan_vs_loop_speedup']:.2f}x, "
-          f"cv batched {artifact['cv']['cv_batched_vs_sequential_speedup']:.2f}x")
+          f"cv batched {artifact['cv']['cv_batched_vs_sequential_speedup']:.2f}x, "
+          f"serve {artifact['serve']['throughput_vs_reference']:.2f}x "
+          f"(hit rate {artifact['serve']['cache_hit_rate']:.2f})")
 
 
 if __name__ == "__main__":

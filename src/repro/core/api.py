@@ -334,23 +334,45 @@ def _enet_path_scan(X, y, lambda1s, lambda2, config: PathConfig) -> EnetPoint:
 
 
 @partial(jax.jit, static_argnames=("config", "axes"))
-def _enet_batch_jit(X, y, lambda1, lambda2, config: PathConfig, axes) -> EnetPoint:
+def _enet_batch_jit(X, y, lambda1, lambda2, warm, has_warm,
+                    config: PathConfig, axes) -> EnetPoint:
     _bump_trace("enet_batch")
 
-    def one(X_, y_, l1_, l2_):
-        return _enet_point(X_, y_, l1_, l2_, cold_carry(X_, y_), config)[1]
+    def one(X_, y_, l1_, l2_, warm_, hw_):
+        carry = cold_carry(X_, y_)
+        if warm_ is not None:
+            # hw_ selects per problem: a cache hit rides its stored warm
+            # state, a miss stays exactly cold — one executable either way.
+            carry = jax.tree.map(
+                lambda w, c: jnp.where(hw_, w.astype(c.dtype), c), warm_, carry)
+        return _enet_point(X_, y_, l1_, l2_, carry, config)
 
-    return jax.vmap(one, in_axes=axes)(X, y, lambda1, lambda2)
+    return jax.vmap(one, in_axes=axes)(X, y, lambda1, lambda2, warm, has_warm)
 
 
 def enet_batch(X, y, lambda1s, lambda2s,
-               config: PathConfig = PathConfig()) -> EnetPoint:
+               config: PathConfig = PathConfig(), *,
+               warm: Optional[EnetCarry] = None,
+               has_warm: Optional[jax.Array] = None,
+               return_carry: bool = False):
     """Stacked penalized solves in one vmapped executable (serving layer).
 
     Batch axes by rank, as in `core.batch.sven_batch`: X (B, n, p) or (n, p)
     shared; y (B, n) or (n,); lambda1/lambda2 (B,) or scalar. Every field of
-    the returned EnetPoint carries a leading (B,) axis.
+    the returned EnetPoint carries a leading (B,) axis. Under an active
+    `repro.dist.mesh_context` the stacked operands take the rule table's
+    "batch" axis placement, exactly as `sven_batch` does.
+
+    `warm` is an optional stacked EnetCarry (every field with a leading (B,)
+    axis) and `has_warm` a (B,) bool selecting, per problem, the warm state
+    over a cold start — the serving runtime's cache feeds adjacent-lambda
+    solutions back through this without splitting the executable. With
+    `return_carry` the final stacked EnetCarry comes back alongside the
+    points (the state the runtime stores for the NEXT adjacent request);
+    default is points only.
     """
+    from repro.core.batch import _maybe_shard_batch
+
     X = jnp.asarray(X)
     dtype = X.dtype
     y = jnp.asarray(y, dtype)
@@ -359,14 +381,27 @@ def enet_batch(X, y, lambda1s, lambda2s,
     axes = (0 if X.ndim == 3 else None,
             0 if y.ndim == 2 else None,
             0 if lambda1s.ndim == 1 else None,
-            0 if lambda2s.ndim == 1 else None)
+            0 if lambda2s.ndim == 1 else None,
+            0 if warm is not None else None,
+            0 if warm is not None else None)
     sizes = {op.shape[0] for op, ax in zip((X, y, lambda1s, lambda2s), axes)
              if ax == 0}
     if not sizes:
         raise ValueError("enet_batch: no batched operand (use enet())")
+    if (warm is None) != (has_warm is None):
+        raise ValueError("enet_batch: warm and has_warm must be given together")
+    if has_warm is not None:
+        has_warm = jnp.asarray(has_warm, bool)
+        sizes.update(jnp.asarray(f).shape[0] for f in warm)
+        sizes.add(has_warm.shape[0])
     if len(sizes) != 1:
         raise ValueError(f"enet_batch: inconsistent batch sizes {sorted(sizes)}")
-    return _enet_batch_jit(X, y, lambda1s, lambda2s, config, axes)
+    X, y, lambda1s, lambda2s = (
+        _maybe_shard_batch(op, ax == 0)
+        for op, ax in zip((X, y, lambda1s, lambda2s), axes[:4]))
+    carry, points = _enet_batch_jit(X, y, lambda1s, lambda2s, warm, has_warm,
+                                    config, axes)
+    return (points, carry) if return_carry else points
 
 
 # ---------------------------------------------------------------------------

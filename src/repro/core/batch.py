@@ -41,13 +41,15 @@ class SvenBatchSolution(NamedTuple):
 
 
 @partial(jax.jit, static_argnames=("config", "axes"))
-def _sven_batch_jit(X, y, t, lambda2, keep, config: SvenConfig, axes) -> SvenArrays:
+def _sven_batch_jit(X, y, t, lambda2, keep, warm_alpha, warm_w,
+                    config: SvenConfig, axes) -> SvenArrays:
     _bump_trace("sven_batch")
 
-    def solve_one(X_, y_, t_, l2_, keep_):
-        return _sven_core(X_, y_, t_, l2_, None, None, config, keep_)
+    def solve_one(X_, y_, t_, l2_, keep_, wa_, ww_):
+        return _sven_core(X_, y_, t_, l2_, wa_, ww_, config, keep_)
 
-    return jax.vmap(solve_one, in_axes=axes)(X, y, t, lambda2, keep)
+    return jax.vmap(solve_one, in_axes=axes)(X, y, t, lambda2, keep,
+                                             warm_alpha, warm_w)
 
 
 def _maybe_shard_batch(arr: jax.Array, batched: bool) -> jax.Array:
@@ -69,6 +71,8 @@ def sven_batch(
     config: SvenConfig = SvenConfig(),
     *,
     keep: jax.Array | None = None,
+    warm_alpha: jax.Array | None = None,
+    warm_w: jax.Array | None = None,
 ) -> SvenBatchSolution:
     """Solve a stack of Elastic Net problems in one vmapped executable.
 
@@ -77,6 +81,11 @@ def sven_batch(
     (see `sven`'s keep). At least one operand must be batched; all batched
     operands must agree on B. Results match a Python loop of per-problem
     `sven` calls to solver tolerance (tested).
+
+    `warm_alpha` (B, 2p) / `warm_w` (B, n) warm-start every problem in the
+    stack — the serving runtime's cache hands back neighbouring solutions
+    through these (zero rows are exactly a cold start, so a mixed
+    hit/miss batch stays a single executable).
     """
     X = jnp.asarray(X)
     dtype = X.dtype
@@ -85,13 +94,19 @@ def sven_batch(
     lambda2 = jnp.asarray(lambda2, dtype)
     if keep is not None:
         keep = jnp.asarray(keep)
+    if warm_alpha is not None:
+        warm_alpha = jnp.asarray(warm_alpha, dtype)
+    if warm_w is not None:
+        warm_w = jnp.asarray(warm_w, dtype)
 
     axes = (0 if X.ndim == 3 else None,
             0 if y.ndim == 2 else None,
             0 if t.ndim == 1 else None,
             0 if lambda2.ndim == 1 else None,
-            0 if keep is not None and keep.ndim == 2 else None)
-    operands = (X, y, t, lambda2, keep)
+            0 if keep is not None and keep.ndim == 2 else None,
+            0 if warm_alpha is not None else None,
+            0 if warm_w is not None else None)
+    operands = (X, y, t, lambda2, keep, warm_alpha, warm_w)
     sizes = {op.shape[0] for op, ax in zip(operands, axes) if ax == 0}
     if not sizes:
         raise ValueError("sven_batch: no batched operand (add a leading batch "
@@ -101,7 +116,8 @@ def sven_batch(
 
     X, y, t, lambda2 = (_maybe_shard_batch(op, ax == 0)
                         for op, ax in zip(operands[:4], axes[:4]))
-    arrs = _sven_batch_jit(X, y, t, lambda2, keep, config, axes)
+    arrs = _sven_batch_jit(X, y, t, lambda2, keep, warm_alpha, warm_w,
+                           config, axes)
     return SvenBatchSolution(beta=arrs.beta, alpha=arrs.alpha, w=arrs.w,
                              iters=arrs.iters, opt_residual=arrs.opt_residual,
                              kkt=arrs.kkt)

@@ -29,25 +29,80 @@ from repro.core.batch import cv_folds
 from repro.core.sven import _bump_trace
 
 
-@partial(jax.jit, static_argnames=("config",))
+def _auto_fold_chunk(k: int) -> int:
+    """Right-size the scan-of-vmap: how many folds advance in vmap lockstep.
+
+    A vmapped `while_loop` costs the MAX trip count across lanes at every
+    nesting level (Illinois evals x Newton iters x CG), so on a single CPU
+    device the k-wide lockstep runs ~1.6x SLOWER than solving folds one
+    after another (BENCH_path.json's cv section tracks this). chunk=1 keeps
+    everything inside ONE executable — an outer `lax.scan` over folds, no
+    per-fold dispatch — which is what beats the host-side per-fold loop on
+    CPU; with real batch parallelism (accelerator backends or a multi-device
+    mesh feeding the "batch" rule-table axis) the full-width vmap wins.
+    """
+    if jax.default_backend() != "cpu" or jax.device_count() > 1:
+        return k
+    return 1
+
+
+@partial(jax.jit, static_argnames=("config", "fold_chunk"))
 def _enet_cv_scan(Xtr, ytr, Xva, yva, lambda1s, lambda2,
-                  config: api.PathConfig):
-    """(L,) grid scan of a (k,)-fold vmap; returns per-point CV diagnostics."""
+                  config: api.PathConfig, fold_chunk: Optional[int] = None):
+    """(L,) grid scan of fold-chunked vmaps; returns per-point CV diagnostics.
+
+    Folds are processed `fold_chunk` at a time (None = all k at once, the
+    pure vmap): an outer scan over k/fold_chunk chunks, each chunk scanning
+    the lambda grid with a fold_chunk-wide vmapped `_enet_point` body and
+    its own warm state carried down the path. Results are identical for any
+    chunking (tested); see `_auto_fold_chunk` for why the size matters.
+    """
     _bump_trace("enet_cv_scan")
+    k = Xtr.shape[0]
+    c = k if fold_chunk is None else fold_chunk
+    if k % c:
+        raise ValueError(f"_enet_cv_scan: fold_chunk={c} must divide k={k}")
+    chunked = jax.tree.map(lambda a: a.reshape(k // c, c, *a.shape[1:]),
+                           (Xtr, ytr, Xva, yva))
 
-    init = jax.vmap(api.cold_carry)(Xtr, ytr)
+    def chunk_body(_, xs):
+        Xt, yt, Xv, yv = xs                            # (c, n_tr, p) ...
+        if c == 1:
+            # skip the inner vmap: even at width 1 it rewrites every nested
+            # while_loop into its masked batched form, which runs ~2.4x
+            # slower than the plain loops on CPU
+            Xf, yf, Xv1, yv1 = Xt[0], yt[0], Xv[0], yv[0]
 
-    def body(carry, lam1):
-        def one(Xf, yf, cf):
-            return api._enet_point(Xf, yf, lam1, lambda2, cf, config)
+            def lam_body1(carry, lam1):
+                carry2, pt = api._enet_point(Xf, yf, lam1, lambda2, carry,
+                                             config)
+                resid = Xv1 @ pt.beta - yv1
+                return carry2, (jnp.mean(resid * resid)[None],
+                                pt.n_kept[None], pt.evals[None])
 
-        carry2, pts = jax.vmap(one)(Xtr, ytr, carry)
-        resid = jnp.einsum("kif,kf->ki", Xva, pts.beta) - yva
-        mse = jnp.mean(resid * resid, axis=1)          # (k,)
-        return carry2, (mse, pts.n_kept, pts.evals)
+            _, out = jax.lax.scan(lam_body1, api.cold_carry(Xf, yf), lambda1s)
+            return None, out                           # each (L, 1)
 
-    _, (mse, n_kept, evals) = jax.lax.scan(body, init, lambda1s)
-    return mse, n_kept, evals                          # each (L, k)
+        init = jax.vmap(api.cold_carry)(Xt, yt)
+
+        def lam_body(carry, lam1):
+            def one(Xf, yf, cf):
+                return api._enet_point(Xf, yf, lam1, lambda2, cf, config)
+
+            carry2, pts = jax.vmap(one)(Xt, yt, carry)
+            resid = jnp.einsum("kif,kf->ki", Xv, pts.beta) - yv
+            mse = jnp.mean(resid * resid, axis=1)      # (c,)
+            return carry2, (mse, pts.n_kept, pts.evals)
+
+        _, out = jax.lax.scan(lam_body, init, lambda1s)
+        return None, out                               # each (L, c)
+
+    _, (mse, n_kept, evals) = jax.lax.scan(chunk_body, None, chunked)
+
+    def reorder(a):                                    # (g, L, c) -> (L, k)
+        return jnp.moveaxis(a, 0, 1).reshape(a.shape[1], k)
+
+    return reorder(mse), reorder(n_kept), reorder(evals)
 
 
 class CVResult(NamedTuple):
@@ -66,6 +121,7 @@ class CVResult(NamedTuple):
 def cross_validate(X, y, *, k: int = 5, lambda1s=None, n_lambdas: int = 40,
                    eps: Optional[float] = None, lambda2=1.0,
                    standardize: bool = True, fit_intercept: bool = True,
+                   fold_chunk: Optional[int] = None,
                    config: api.PathConfig = api.PathConfig()) -> CVResult:
     """K-fold CV over the lambda grid, batched across folds; refit at the min.
 
@@ -73,6 +129,11 @@ def cross_validate(X, y, *, k: int = 5, lambda1s=None, n_lambdas: int = 40,
     data (so every fold sees the same grid, as cv.glmnet does); held-out MSE
     is measured in the centered space, which equals original-space MSE
     because the scaler is global.
+
+    `fold_chunk` sets how many folds advance in vmap lockstep (must divide
+    k); the default picks per backend — all k on accelerators / multi-device
+    meshes, 1 (a pure scan, still one executable) on a single CPU device,
+    where lockstep loses (see `_auto_fold_chunk`).
     """
     X = jnp.asarray(X)
     y = jnp.asarray(y, X.dtype)
@@ -83,9 +144,14 @@ def cross_validate(X, y, *, k: int = 5, lambda1s=None, n_lambdas: int = 40,
     lambda1s = jnp.asarray(lambda1s, X.dtype)
     lam2 = jnp.asarray(lambda2, X.dtype)
 
+    if fold_chunk is None:
+        fold_chunk = _auto_fold_chunk(k)
+    if k % fold_chunk:
+        raise ValueError(f"cross_validate: fold_chunk={fold_chunk} must "
+                         f"divide k={k}")
     Xtr, ytr, Xva, yva = cv_folds(Xs, ys, k)
     mse, n_kept, evals = _enet_cv_scan(Xtr, ytr, Xva, yva, lambda1s, lam2,
-                                       config)
+                                       config, fold_chunk)
     mean_mse = jnp.mean(mse, axis=1)
     i_min = int(jnp.argmin(mean_mse))
     lambda_min = float(lambda1s[i_min])

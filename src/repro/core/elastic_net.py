@@ -76,6 +76,25 @@ def kkt_multiplier(
     return jnp.sum(jnp.where(active, nu_each, 0.0)) / denom
 
 
+def kkt_violation_from_grad(
+    g: jax.Array, beta: jax.Array, zero_tol: float = 1e-8
+) -> jax.Array:
+    """`kkt_violation` given a precomputed smooth gradient g at beta.
+
+    The split exists for callers that never hold (X, y) explicitly: the
+    online runtime keeps only the sufficient statistics (G = X^T X,
+    X^T y), from which g = 2 (G beta - X^T y) + 2 lambda2 beta — so the
+    same diagnostic applies to streamed data (runtime/online.py).
+    """
+    active = jnp.abs(beta) > zero_tol
+    nu_each = -g * jnp.sign(beta)
+    denom = jnp.maximum(jnp.sum(active), 1)
+    nu = jnp.sum(jnp.where(active, nu_each, 0.0)) / denom
+    act_res = jnp.where(active, jnp.abs(nu_each - nu), 0.0)
+    inact_res = jnp.where(~active, jnp.maximum(jnp.abs(g) - nu, 0.0), 0.0)
+    return jnp.maximum(jnp.max(act_res), jnp.max(inact_res)) / (1.0 + jnp.abs(nu))
+
+
 def kkt_violation(
     X: jax.Array, y: jax.Array, beta: jax.Array, lambda2: float, zero_tol: float = 1e-8
 ) -> jax.Array:
@@ -85,11 +104,7 @@ def kkt_violation(
     satisfy |g_j| <= nu. Scale-free-ish: normalized by (1 + nu).
     """
     g = smooth_grad(X, y, beta, lambda2)
-    active = jnp.abs(beta) > zero_tol
-    nu = kkt_multiplier(X, y, beta, lambda2, zero_tol)
-    act_res = jnp.where(active, jnp.abs(-g * jnp.sign(beta) - nu), 0.0)
-    inact_res = jnp.where(~active, jnp.maximum(jnp.abs(g) - nu, 0.0), 0.0)
-    return jnp.maximum(jnp.max(act_res), jnp.max(inact_res)) / (1.0 + jnp.abs(nu))
+    return kkt_violation_from_grad(g, beta, zero_tol)
 
 
 def lambda1_max(X: jax.Array, y: jax.Array) -> jax.Array:

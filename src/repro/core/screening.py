@@ -35,7 +35,15 @@ class ScreenResult(NamedTuple):
 
 
 def gap_safe_screen(X: jax.Array, y: jax.Array, beta: jax.Array,
-                    lambda1: float, lambda2: float) -> ScreenResult:
+                    lambda1: float, lambda2: float,
+                    slack: float = 1e-6) -> ScreenResult:
+    """`slack` is a pure-numerics guard on the discard boundary: at a warm
+    point that is already (near-)optimal the duality gap underflows toward 0
+    and ACTIVE coordinates sit exactly on |corr_j|/scale = 1, where f64
+    roundoff (O(1e-8) observed) can push them to the discard side. Keeping a
+    1e-6 band around the boundary costs a few extra kept columns and keeps
+    the rule safe for the serving runtime's repeat-traffic warm starts,
+    which screen at exactly such converged points."""
     lam = lambda1 / 2.0
     r = y - X @ beta
     corr = X.T @ r - lambda2 * beta                        # (p,)
@@ -54,7 +62,7 @@ def gap_safe_screen(X: jax.Array, y: jax.Array, beta: jax.Array,
 
     radius = jnp.sqrt(2.0 * gap) / lam
     col_norm = jnp.sqrt(jnp.sum(X * X, axis=0) + lambda2)
-    keep = (jnp.abs(corr) / scale + radius * col_norm) >= 1.0
+    keep = (jnp.abs(corr) / scale + radius * col_norm) >= 1.0 - slack
     return ScreenResult(keep=keep, gap=gap, n_kept=jnp.sum(keep))
 
 

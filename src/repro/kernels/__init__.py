@@ -1,3 +1,26 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the SVEN hot spots, with pure-jnp oracles.
+
+Public surface:
+
+  - `ops` — the jitted entry points (`shifted_gram`, `hinge_hessian_matvec`,
+    `hinge_stats`): padding/dtype handling, interpret-mode fallback on CPU,
+    and a `use_pallas=False` escape hatch routing to the oracle;
+  - `ref` — the pure-jnp oracles, the correctness ground truth every kernel
+    is parity-tested against (`tests/test_kernels.py`,
+    `tests/test_kernels_surface.py`).
+
+The three ops are re-exported at package level; `core/sven.py` selects them
+via `SvenConfig(backend="pallas")`. Raw kernel bodies (`gram`, `hinge`,
+`hinge_stats` modules) are implementation detail — call through `ops`,
+which owns tiling and padding.
+"""
+from repro.kernels import ops, ref
+from repro.kernels.ops import hinge_hessian_matvec, hinge_stats, shifted_gram
+
+__all__ = [
+    "ops",
+    "ref",
+    "shifted_gram",
+    "hinge_hessian_matvec",
+    "hinge_stats",
+]

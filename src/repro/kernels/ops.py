@@ -12,6 +12,7 @@ import jax.numpy as jnp
 
 from repro.kernels import gram as _gram
 from repro.kernels import hinge as _hinge
+from repro.kernels import hinge_stats as _hs
 from repro.kernels import ref as _ref
 
 
@@ -119,7 +120,6 @@ def hinge_stats(
     """Fused Newton outer-step stats: (margin (2p,), act (2p,), loss, galpha)."""
     if not use_pallas:
         return _ref.hinge_stats_ref(X, y, t, w, C)
-    from repro.kernels import hinge_stats as _hs
     interp = _on_cpu() if interpret is None else interpret
     n, p = X.shape
     bp_ = min(bp, _next_mult(p))

@@ -1,8 +1,10 @@
-"""Elastic Net serving launcher: drive ElasticNetEngine with a synthetic
-request stream of varied shapes and report batched-vs-sequential throughput,
-bucket/executable reuse, and exactness vs direct per-request solves.
-`--penalized N` mixes N glmnet-style (lambda1, lambda2) requests per wave
-into the stream; those are verified against the coordinate-descent baseline.
+"""Elastic Net serving launcher, now on the continuous-batching runtime:
+drive a `ContinuousScheduler` with a reproducible open-loop request stream
+(mixed constrained + glmnet-form, adjacent-lambda pattern) and report
+runtime-vs-reference throughput, warm-start cache behaviour, executable
+reuse, and exactness against direct per-request solves. The synchronous
+seed path survives as `ElasticNetEngine.drain_reference()` and is timed as
+the baseline every wave.
 
     PYTHONPATH=src python -m repro.launch.serve_en --requests 24 --waves 3
 """
@@ -15,41 +17,18 @@ import jax
 
 jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
-import numpy as np
 
 from repro.baselines import elastic_net_cd
 from repro.core import SvenConfig, enet, sven
-from repro.core.elastic_net import lambda1_max
-from repro.data.synthetic import make_regression
+from repro.runtime import (CONSTRAINED, PENALIZED, ContinuousScheduler,
+                           LoadSpec, make_workload, run_open_loop)
 from repro.serve import ElasticNetEngine
 
 
-def _random_requests(rng: np.random.Generator, count: int):
-    """Varied-shape EN problems with t set from a ridge-ish scale heuristic."""
-    reqs = []
-    for _ in range(count):
-        n = int(rng.integers(20, 90))
-        p = int(rng.integers(10, 120))
-        X, y, _ = make_regression(n, p, k_true=max(3, p // 8),
-                                  rho=0.3, seed=int(rng.integers(1 << 30)))
-        t = float(0.1 * jnp.sum(jnp.abs(X.T @ y)) / (X.shape[0]))
-        lam2 = float(rng.choice([0.5, 1.0, 2.0]))
-        reqs.append((X, y, max(t, 1e-3), lam2))
-    return reqs
-
-
-def _random_penalized(rng: np.random.Generator, count: int):
-    """Penalized-form requests: lambda1 drawn as a fraction of lambda1_max."""
-    reqs = []
-    for _ in range(count):
-        n = int(rng.integers(20, 90))
-        p = int(rng.integers(10, 120))
-        X, y, _ = make_regression(n, p, k_true=max(3, p // 8),
-                                  rho=0.3, seed=int(rng.integers(1 << 30)))
-        lam1 = float(rng.uniform(0.1, 0.6)) * float(lambda1_max(X, y))
-        lam2 = float(rng.choice([0.5, 1.0, 2.0]))
-        reqs.append((X, y, lam1, lam2))
-    return reqs
+def _direct_solve(item, cfg: SvenConfig):
+    if item.form == PENALIZED:
+        return enet(item.X, item.y, item.lam, item.lambda2).beta
+    return sven(item.X, item.y, item.lam, item.lambda2, cfg).beta
 
 
 def run(argv=None):
@@ -58,66 +37,94 @@ def run(argv=None):
     ap.add_argument("--waves", type=int, default=3)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--verify", type=int, default=4,
-                    help="requests per wave cross-checked against direct sven()")
+                    help="requests per wave cross-checked against direct "
+                         "sven()/enet() solves")
     ap.add_argument("--penalized", type=int, default=2,
-                    help="additional glmnet-form requests per wave "
-                         "(verified against coordinate descent)")
+                    help="glmnet-form requests per wave (verified against "
+                         "coordinate descent)")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-wait", type=float, default=2e-3,
+                    help="coalescing window (s) before a deadline launch")
     args = ap.parse_args(argv)
 
-    rng = np.random.default_rng(args.seed)
     cfg = SvenConfig()
-    engine = ElasticNetEngine(cfg)
+    total = args.requests + args.penalized
+    sched = ContinuousScheduler(cfg, max_batch=args.max_batch,
+                                max_wait=args.max_wait)
+    reference = ElasticNetEngine(cfg, max_batch=args.max_batch, cache=None)
 
     new_execs_last_wave = 0
     for wave in range(args.waves):
-        batches0 = engine.stats.batches
-        execs0 = engine.stats.bucket_shapes
-        padded0 = engine.stats.padded_slots
-        reqs = _random_requests(rng, args.requests)
-        ids = [engine.submit(*r) for r in reqs]
-        pen_reqs = _random_penalized(rng, args.penalized)
-        pen_ids = [engine.submit_penalized(*r) for r in pen_reqs]
+        execs0 = sched.stats.bucket_shapes
+        batches0 = sched.stats.batches
+        padded0 = sched.stats.padded_slots
+        # data_seed pins the datasets: every wave revisits the same problems
+        # at freshly drawn adjacent lambdas — steady-state serving traffic,
+        # which is what exercises both executable reuse and the warm cache.
+        spec = LoadSpec(n_requests=total,
+                        penalized_fraction=args.penalized / max(total, 1),
+                        seed=args.seed + wave, data_seed=args.seed)
+        workload = make_workload(spec)
+
+        out = run_open_loop(sched, workload)
+        results, ids = out["results"], out["ids"]
+
+        # synchronous baseline: the seed engine's cold blocking drain over
+        # the SAME wave (its own executables; first wave pays compile)
+        ref_ids = []
+        for item in workload:
+            if item.form == PENALIZED:
+                ref_ids.append(reference.submit_penalized(
+                    item.X, item.y, item.lam, item.lambda2))
+            else:
+                ref_ids.append(reference.submit(
+                    item.X, item.y, item.lam, item.lambda2))
         t0 = time.perf_counter()
-        out = engine.drain()
-        batched_s = time.perf_counter() - t0
+        ref_results = reference.drain_reference()
+        reference_s = time.perf_counter() - t0
 
-        # sequential baseline: one engine-less solve per request (jit-cached
-        # per raw shape — the dispatch pattern the engine replaces), covering
-        # BOTH request forms so the speedup compares equal work
-        t0 = time.perf_counter()
-        seq = [jax.block_until_ready(sven(X, y, t, l2, cfg).beta)
-               for X, y, t, l2 in reqs]
-        seq_pen = [jax.block_until_ready(enet(X, y, l1, l2).beta)
-                   for X, y, l1, l2 in pen_reqs]
-        sequential_s = time.perf_counter() - t0
+        max_dev = ref_dev = pen_dev = 0.0
+        n_verified = 0
+        for item, rid, ref_rid in zip(workload, ids, ref_ids):
+            ref_dev = max(ref_dev, float(jnp.abs(
+                results[rid].beta - ref_results[ref_rid].beta).max()))
+            if n_verified < args.verify:
+                direct = _direct_solve(item, cfg)
+                max_dev = max(max_dev,
+                              float(jnp.abs(results[rid].beta - direct).max()))
+                n_verified += 1
+            if item.form == PENALIZED:
+                beta_cd = elastic_net_cd(item.X, item.y, item.lam,
+                                         item.lambda2).beta
+                pen_dev = max(pen_dev, float(jnp.abs(
+                    results[rid].beta - beta_cd).max()))
 
-        max_dev = 0.0
-        for i in range(min(args.verify, len(reqs))):
-            max_dev = max(max_dev, float(jnp.abs(out[ids[i]].beta - seq[i]).max()))
-
-        pen_dev = 0.0
-        for (X, y, lam1, lam2), rid, sp in zip(pen_reqs, pen_ids, seq_pen):
-            beta_cd = elastic_net_cd(X, y, lam1, lam2).beta
-            pen_dev = max(pen_dev,
-                          float(jnp.abs(out[rid].beta - beta_cd).max()),
-                          float(jnp.abs(out[rid].beta - sp).max()))
-
-        s = engine.stats
-        new_execs_last_wave = s.bucket_shapes - execs0
-        print(f"[serve_en] wave {wave}: {len(reqs)}+{len(pen_reqs)}pen reqs in "
-              f"{s.batches - batches0} batches | "
-              f"batched {batched_s*1e3:7.1f} ms  sequential {sequential_s*1e3:7.1f} ms "
-              f"({sequential_s/max(batched_s,1e-9):4.1f}x) | "
+        new_execs_last_wave = sched.stats.bucket_shapes - execs0
+        print(f"[serve_en] wave {wave}: {total} reqs "
+              f"({args.penalized} pen) in {sched.stats.batches - batches0} "
+              f"batches | runtime {out['wall_seconds']*1e3:7.1f} ms  "
+              f"reference {reference_s*1e3:7.1f} ms "
+              f"({reference_s/max(out['wall_seconds'],1e-9):4.1f}x) | "
+              f"p50 {out['p50_latency_s']*1e3:6.1f} ms "
+              f"p99 {out['p99_latency_s']*1e3:6.1f} ms | "
               f"new_executables={new_execs_last_wave} "
-              f"padded_slots={s.padded_slots - padded0} | "
-              f"max|beta-beta_seq|={max_dev:.2e} pen_dev={pen_dev:.2e}")
-        assert max_dev < 1e-6, "engine diverged from direct sven()"
+              f"padded_slots={sched.stats.padded_slots - padded0} "
+              f"cache_hit_rate={sched.cache.hit_rate:.2f} | "
+              f"max|beta-beta_direct|={max_dev:.2e} "
+              f"ref_dev={ref_dev:.2e} pen_dev={pen_dev:.2e}")
+        assert max_dev < 1e-6, "runtime diverged from direct solves"
+        assert ref_dev < 1e-6, "runtime diverged from drain_reference()"
         assert pen_dev < 1e-5, "penalized path diverged from coordinate descent"
 
     steady = ("last wave added none" if new_execs_last_wave == 0
               else f"last wave still added {new_execs_last_wave}")
-    print(f"[serve_en] done: {engine.stats.requests} requests, "
-          f"{engine.stats.bucket_shapes} compiled executables total ({steady}).")
+    print(f"[serve_en] done: {sched.stats.requests} runtime requests, "
+          f"{sched.stats.bucket_shapes} compiled executables ({steady}); "
+          f"launches: {sched.stats.launched_full} full / "
+          f"{sched.stats.launched_deadline} deadline / "
+          f"{sched.stats.launched_flush} flush; "
+          f"warm-start hits {sched.cache.hits}/"
+          f"{sched.cache.hits + sched.cache.misses}.")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,41 @@
+"""repro.runtime — asynchronous continuous-batching serving runtime
+(DESIGN.md §8).
+
+The layer between the solver engine (core/) and the serving facade
+(serve/): an event-loop scheduler that coalesces live requests onto the
+power-of-two bucket ladder and launches vmapped solves asynchronously
+(`scheduler`), a warm-start solution cache exploiting the paper's
+adjacent-lambda observation (`cache`), rank-1 streaming-row updates
+(`online`), latency/throughput percentile accounting (`metrics`) and a
+reproducible open-loop load generator (`loadgen` — also the CI serving
+smoke: ``python -m repro.runtime.loadgen``).
+"""
+from repro.runtime.cache import (CONSTRAINED, PENALIZED, SolutionCache,
+                                 WarmEntry, fingerprint_problem)
+from repro.runtime.loadgen import LoadItem, LoadSpec, make_workload, run_open_loop
+from repro.runtime.metrics import LatencyRecorder, percentile
+from repro.runtime.online import OnlineElasticNet, OnlineSolution, OnlineStats
+from repro.runtime.scheduler import (ContinuousScheduler, EnRequest, EnResult,
+                                     RuntimeStats, ceil_pow2)
+
+__all__ = [
+    "ContinuousScheduler",
+    "EnRequest",
+    "EnResult",
+    "RuntimeStats",
+    "ceil_pow2",
+    "SolutionCache",
+    "WarmEntry",
+    "fingerprint_problem",
+    "CONSTRAINED",
+    "PENALIZED",
+    "OnlineElasticNet",
+    "OnlineSolution",
+    "OnlineStats",
+    "LatencyRecorder",
+    "percentile",
+    "LoadSpec",
+    "LoadItem",
+    "make_workload",
+    "run_open_loop",
+]

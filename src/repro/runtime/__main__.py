@@ -1,0 +1,4 @@
+"""`python -m repro.runtime` — the serving-load smoke (loadgen CLI)."""
+from repro.runtime.loadgen import main
+
+main()

@@ -1,0 +1,147 @@
+"""Warm-start solution cache for the serving runtime (DESIGN.md §8).
+
+The paper's own warm-start observation — solutions at adjacent points of the
+regularization surface are near-identical, which is why `sven_path` carries
+(alpha, w) down the t-grid — is exactly the structure serving traffic has:
+the same dataset re-solved at a new lambda (hyperparameter sweeps, CV-like
+exploration, online refresh). The cache keys solved problems by
+
+    (data fingerprint, problem form)  ->  [ (lambda-point, solution), ... ]
+
+and answers a lookup with the stored solution whose regularization point is
+NEAREST in log-space, provided it falls inside the `neighborhood` radius.
+The hit is fed back into `sven_batch` / `enet_batch` as a warm start — never
+returned directly — so a hit changes iteration count, not the answer:
+repeat and adjacent-lambda traffic re-solves in a few Newton steps instead
+of from cold (measured in BENCH_path.json's ``serve.cache_hit_rate``).
+
+Stored warm arrays live in the PADDED bucket geometry the scheduler solves
+in (a fingerprint maps to one bucket, since buckets are shape-derived), so
+a hit is handed straight to the stacked solve with no re-layout.
+"""
+from __future__ import annotations
+
+import collections
+import hashlib
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import numpy as np
+
+#: Problem forms the runtime serves; the cache keeps them in disjoint keys
+#: because their lambda-points live on different axes (t vs lambda1).
+CONSTRAINED = "constrained"
+PENALIZED = "penalized"
+
+
+def fingerprint_problem(X, y) -> str:
+    """Content hash of one (X, y) problem: shape + exact bytes.
+
+    blake2b over the raw buffers — a repeat submission of the same data hits
+    the same key; any changed entry (even 1 ulp) is a different problem.
+    Costs one host pass over X, negligible next to a solve.
+    """
+    h = hashlib.blake2b(digest_size=16)
+    Xh = np.asarray(X)
+    yh = np.asarray(y)
+    h.update(str((Xh.shape, str(Xh.dtype))).encode())
+    h.update(Xh.tobytes())
+    h.update(yh.tobytes())
+    return h.hexdigest()
+
+
+class WarmEntry(NamedTuple):
+    """One cached solution at one point of the regularization surface.
+
+    Arrays are HOST (numpy) copies in the padded bucket geometry: a hit is
+    a memcpy into the next launch's warm buffers, no device round trip."""
+
+    lam: float            # the lambda-point: t (constrained) or lambda1
+    lambda2: float
+    alpha: np.ndarray     # (2*bp,) dual iterate, padded bucket geometry
+    w: np.ndarray         # (bn,) primal iterate, padded bucket geometry
+    beta: np.ndarray      # (bp,) padded solution (penalized warm screening)
+    t: float              # L1 budget of the stored solution
+    nu: float             # multiplier at the stored solution (penalized)
+
+
+def _log_distance(a: float, b: float) -> float:
+    """|log(a/b)| with a floor so lambda2 = 0 (Lasso) still compares."""
+    eps = 1e-12
+    return abs(math.log((abs(a) + eps) / (abs(b) + eps)))
+
+
+class SolutionCache:
+    """LRU cache of solved problems, bounded per problem and overall.
+
+    `neighborhood` is the hit radius in log-lambda space: an entry at
+    (lam_e, lambda2_e) warm-starts a request at (lam_r, lambda2_r) when
+    |log(lam_r/lam_e)| + |log(lambda2_r/lambda2_e)| <= neighborhood. The
+    default (1.0 ~ one e-fold) is deliberately wide — a warm start is an
+    initial iterate, so a far hit costs extra iterations, never correctness.
+    """
+
+    def __init__(self, *, max_problems: int = 128, per_problem: int = 8,
+                 neighborhood: float = 1.0) -> None:
+        if max_problems < 1 or per_problem < 1 or neighborhood <= 0:
+            raise ValueError(
+                f"SolutionCache: max_problems/per_problem must be >= 1 and "
+                f"neighborhood > 0 (got {max_problems}/{per_problem}/"
+                f"{neighborhood})")
+        self.max_problems = max_problems
+        self.per_problem = per_problem
+        self.neighborhood = neighborhood
+        self.hits = 0
+        self.misses = 0
+        self._store: "collections.OrderedDict[Tuple[str, str], list]" = (
+            collections.OrderedDict())
+
+    def __len__(self) -> int:
+        return sum(len(v) for v in self._store.values())
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def reset_counters(self) -> None:
+        self.hits = 0
+        self.misses = 0
+
+    def lookup(self, fp: str, form: str, lam: float,
+               lambda2: float) -> Optional[WarmEntry]:
+        """Nearest stored solution within the neighborhood, else None."""
+        entries = self._store.get((fp, form))
+        if entries:
+            self._store.move_to_end((fp, form))
+            best = min(entries, key=lambda e: (_log_distance(lam, e.lam)
+                                               + _log_distance(lambda2,
+                                                               e.lambda2)))
+            dist = (_log_distance(lam, best.lam)
+                    + _log_distance(lambda2, best.lambda2))
+            if dist <= self.neighborhood:
+                self.hits += 1
+                return best
+        self.misses += 1
+        return None
+
+    def insert(self, fp: str, form: str, entry: WarmEntry) -> None:
+        """Store a solved point; evicts the nearest-lambda duplicate first,
+        then the oldest, keeping at most `per_problem` spread-out points."""
+        key = (fp, form)
+        entries = self._store.get(key)
+        if entries is None:
+            if len(self._store) >= self.max_problems:
+                self._store.popitem(last=False)   # LRU problem eviction
+            entries = []
+            self._store[key] = entries
+        else:
+            self._store.move_to_end(key)
+            same = [e for e in entries
+                    if _log_distance(entry.lam, e.lam)
+                    + _log_distance(entry.lambda2, e.lambda2) < 1e-9]
+            for e in same:
+                entries.remove(e)
+        entries.append(entry)
+        if len(entries) > self.per_problem:
+            entries.pop(0)

@@ -1,0 +1,193 @@
+"""Reproducible open-loop load generator for the serving runtime.
+
+Builds a seeded synthetic request stream — a handful of distinct datasets,
+each hit repeatedly at nearby points of the regularization surface (the
+"adjacent-lambda" pattern real hyperparameter-sweep traffic has, and the
+pattern the warm-start cache exists for) — and plays it into a
+`ContinuousScheduler` WITHOUT waiting for completions between submissions
+(open loop: arrival times are independent of service times, so the
+scheduler's coalescing and async dispatch are what's being measured, not
+the client's pacing).
+
+    PYTHONPATH=src python -m repro.runtime.loadgen --requests 24 --waves 3
+
+The CLI is the CI serving smoke: wave 1 compiles the bucket executables,
+later waves must add ZERO new traces and ZERO new executables (asserted) —
+the continuous-batching runtime serves steady-state traffic on a constant
+compiled set, with the cache absorbing repeat/adjacent work.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, NamedTuple, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.runtime.cache import CONSTRAINED, PENALIZED
+
+
+@dataclasses.dataclass(frozen=True)
+class LoadSpec:
+    """A seeded description of one request stream (fully reproducible)."""
+
+    n_requests: int = 64
+    n_datasets: int = 3                       # distinct (X, y) problems
+    shapes: Sequence[Tuple[int, int]] = ((48, 24), (64, 40), (30, 56))
+    pattern: str = "adjacent"                 # "adjacent" | "uniform"
+    adjacent_width: float = 0.1               # +-10% around each lam center
+    penalized_fraction: float = 0.0           # mix of glmnet-form requests
+    lambda2_choices: Sequence[float] = (0.5, 1.0, 2.0)
+    arrival_rate: Optional[float] = None      # req/s; None = back-to-back
+    seed: int = 0
+    data_seed: Optional[int] = None           # pin datasets across specs:
+    # two specs sharing data_seed draw DIFFERENT lambda/arrival streams over
+    # the SAME datasets — the repeat-traffic shape warm-start caching serves.
+
+
+class LoadItem(NamedTuple):
+    arrival: float        # seconds after stream start (0.0 when unpaced)
+    dataset: int
+    X: np.ndarray
+    y: np.ndarray
+    form: str
+    lam: float
+    lambda2: float
+    priority: int
+
+
+def make_workload(spec: LoadSpec) -> List[LoadItem]:
+    """Materialize the stream: every array and lambda is a pure function of
+    the spec (same spec => byte-identical workload => same fingerprints)."""
+    from repro.core.elastic_net import lambda1_max
+    from repro.data.synthetic import make_regression
+
+    rng = np.random.default_rng(spec.seed)
+    data_seed = spec.seed if spec.data_seed is None else spec.data_seed
+    rng_data = np.random.default_rng(data_seed * 7919 + 13)
+    datasets = []
+    for d in range(spec.n_datasets):
+        n, p = spec.shapes[d % len(spec.shapes)]
+        X, y, _ = make_regression(n, p, k_true=max(3, p // 6), rho=0.3,
+                                  seed=data_seed * 1000 + d)
+        X, y = np.asarray(X), np.asarray(y)
+        t_center = float(0.15 * np.abs(X.T @ y).sum() / n)
+        l1_center = float(0.3 * lambda1_max(X, y))
+        # lambda2 is a per-DATASET trait (drawn from the data rng): waves
+        # sharing data_seed revisit the same (dataset, lambda2) pairs, so
+        # adjacent-lambda1/t traffic lands inside the cache neighborhood.
+        lam2 = float(rng_data.choice(spec.lambda2_choices))
+        datasets.append((X, y, max(t_center, 1e-3), l1_center, lam2))
+
+    items: List[LoadItem] = []
+    arrival = 0.0
+    for _ in range(spec.n_requests):
+        d = int(rng.integers(spec.n_datasets))
+        X, y, t_c, l1_c, lam2 = datasets[d]
+        pen = rng.random() < spec.penalized_fraction
+        center = l1_c if pen else t_c
+        if spec.pattern == "adjacent":
+            lam = center * (1.0 + spec.adjacent_width
+                            * float(rng.uniform(-1.0, 1.0)))
+        elif spec.pattern == "uniform":
+            lam = center * float(rng.uniform(0.4, 1.6))
+        else:
+            raise ValueError(f"make_workload: unknown pattern {spec.pattern!r}")
+        if spec.arrival_rate:
+            arrival += float(rng.exponential(1.0 / spec.arrival_rate))
+        items.append(LoadItem(
+            arrival=arrival, dataset=d, X=X, y=y,
+            form=PENALIZED if pen else CONSTRAINED, lam=lam, lambda2=lam2,
+            priority=int(rng.integers(0, 3))))
+    return items
+
+
+def run_open_loop(scheduler, workload: Sequence[LoadItem], *,
+                  pace: bool = False) -> dict:
+    """Play a workload into a scheduler; returns wall time + metrics summary.
+
+    Submissions never wait on results (`submit` polls, launching full /
+    expired buckets asynchronously); everything still pending is flushed
+    and harvested at the end, so the returned summary covers every request.
+    The scheduler's latency recorder is reset first — each run's summary
+    stands alone even when waves share one scheduler (warm cache, compiled
+    executables).
+    """
+    scheduler.metrics.reset()
+    ids = []
+    t0 = time.perf_counter()
+    for item in workload:
+        if pace and item.arrival > 0.0:
+            lag = t0 + item.arrival - time.perf_counter()
+            if lag > 0:
+                time.sleep(lag)
+        kw = ({"lambda1": item.lam} if item.form == PENALIZED
+              else {"t": item.lam})
+        ids.append(scheduler.submit(item.X, item.y, lambda2=item.lambda2,
+                                    priority=item.priority, **kw))
+    results = scheduler.drain()
+    wall = time.perf_counter() - t0
+    out = {"n_requests": len(workload), "wall_seconds": wall,
+           "results": results, "ids": ids}
+    out.update(scheduler.metrics.summary())
+    return out
+
+
+def main(argv=None) -> None:
+    """CI serving smoke: steady-state waves must not retrace or recompile."""
+    import argparse
+
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+
+    from repro.core import reset_trace_counts, trace_counts
+    from repro.runtime.scheduler import ContinuousScheduler
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=24, help="per wave")
+    ap.add_argument("--waves", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--penalized", type=float, default=0.25,
+                    help="fraction of glmnet-form requests")
+    args = ap.parse_args(argv)
+
+    # fixed_batch pins one executable per (bucket, form); repeating the SAME
+    # seeded wave makes the steady-state zero-retrace assertion exact (launch
+    # sizes under deadline scheduling would otherwise vary with wall clock).
+    sched = ContinuousScheduler(max_batch=args.max_batch, max_wait=0.005,
+                                fixed_batch=True)
+    spec = LoadSpec(n_requests=args.requests,
+                    penalized_fraction=args.penalized, seed=args.seed)
+    workload = make_workload(spec)
+    reset_trace_counts()
+    steady_traces = None
+    steady_execs = None
+    for wave in range(args.waves):
+        summary = run_open_loop(sched, workload)
+        new_traces = dict(trace_counts())
+        execs = sched.stats.bucket_shapes
+        print(f"[loadgen] wave {wave}: {summary['n_completed']}/"
+              f"{args.requests} done in {summary['wall_seconds']*1e3:7.1f} ms"
+              f" | p50 {summary['p50_latency_s']*1e3:6.1f} ms"
+              f" p99 {summary['p99_latency_s']*1e3:6.1f} ms"
+              f" | executables={execs}"
+              f" cache_hit_rate={sched.cache.hit_rate:.2f}"
+              f" traces={sum(new_traces.values())}")
+        assert summary["n_completed"] == args.requests, "lost requests"
+        if wave > 0:
+            assert new_traces == steady_traces, (
+                f"steady-state wave retraced: {steady_traces} -> {new_traces}")
+            assert execs == steady_execs, (
+                f"steady-state wave compiled new executables: "
+                f"{steady_execs} -> {execs}")
+        steady_traces, steady_execs = new_traces, execs
+    assert sched.cache.hits > 0, "adjacent-lambda stream produced no cache hits"
+    print(f"[loadgen] steady state OK: {sched.stats.requests} requests, "
+          f"{steady_execs} executables, zero retrace after wave 0, "
+          f"{sched.cache.hits} warm-start cache hits.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""Latency and throughput accounting for the serving runtime (DESIGN.md §8).
+
+Every request passes through three instants — submitted (admission),
+launched (its micro-batch dispatched to the device) and completed (results
+unpadded and delivered) — so the recorder can split end-to-end latency into
+queue wait (submitted -> launched: the price of coalescing) and service
+time (launched -> completed: device compute + harvest). `summary()` folds
+the per-request records into the percentile/throughput numbers
+`benchmarks/bench_serve.py` serializes into BENCH_path.json's ``serve``
+section.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Iterable, Optional, Sequence
+
+
+def percentile(values: Sequence[float], q: float) -> float:
+    """Linear-interpolated percentile (q in [0, 100]) of a non-empty list."""
+    if not values:
+        raise ValueError("percentile: empty sequence")
+    xs = sorted(values)
+    if len(xs) == 1:
+        return xs[0]
+    pos = (len(xs) - 1) * q / 100.0
+    lo = math.floor(pos)
+    hi = math.ceil(pos)
+    frac = pos - lo
+    return xs[lo] * (1.0 - frac) + xs[hi] * frac
+
+
+@dataclasses.dataclass
+class RequestTimes:
+    """The three instants of one request's life in the runtime."""
+
+    submitted: float
+    launched: Optional[float] = None
+    completed: Optional[float] = None
+
+    @property
+    def queue_wait(self) -> Optional[float]:
+        if self.launched is None:
+            return None
+        return self.launched - self.submitted
+
+    @property
+    def latency(self) -> Optional[float]:
+        if self.completed is None:
+            return None
+        return self.completed - self.submitted
+
+
+class LatencyRecorder:
+    """Per-request event log; pure host-side bookkeeping, no device syncs."""
+
+    def __init__(self) -> None:
+        self._times: Dict[int, RequestTimes] = {}
+
+    def submitted(self, req_id: int, now: float) -> None:
+        self._times[req_id] = RequestTimes(submitted=now)
+
+    def launched(self, req_ids: Iterable[int], now: float) -> None:
+        # ids missing from _times were submitted before a reset() — they
+        # are simply no longer tracked, never an error on the serving path
+        for rid in req_ids:
+            t = self._times.get(rid)
+            if t is not None:
+                t.launched = now
+
+    def completed(self, req_ids: Iterable[int], now: float) -> None:
+        for rid in req_ids:
+            t = self._times.get(rid)
+            if t is not None:
+                t.completed = now
+
+    def reset(self) -> None:
+        self._times.clear()
+
+    @property
+    def completed_count(self) -> int:
+        return sum(1 for t in self._times.values() if t.completed is not None)
+
+    def summary(self, quantiles: Sequence[float] = (50.0, 90.0, 99.0)) -> dict:
+        """Latency percentiles (seconds) + open-loop throughput (req/s).
+
+        Throughput is completed requests over the span from the first
+        submission to the last completion — the sustained rate an open-loop
+        client observed, not the reciprocal of mean latency.
+        """
+        done = [t for t in self._times.values() if t.completed is not None]
+        if not done:
+            return {"n_completed": 0, "req_per_s": 0.0}
+        lat = [t.latency for t in done]
+        waits = [t.queue_wait for t in done if t.queue_wait is not None]
+        span = (max(t.completed for t in done)
+                - min(t.submitted for t in done))
+        out = {
+            "n_completed": len(done),
+            "req_per_s": len(done) / max(span, 1e-12),
+            "mean_latency_s": sum(lat) / len(lat),
+        }
+        for q in quantiles:
+            out[f"p{int(q)}_latency_s"] = percentile(lat, q)
+        if waits:
+            out["mean_queue_wait_s"] = sum(waits) / len(waits)
+        return out

@@ -1,0 +1,473 @@
+"""Continuous micro-batching scheduler for Elastic Net serving (DESIGN.md §8).
+
+The seed engine's `drain()` was a synchronous wall: requests queued on the
+host, then one blocking `block_until_ready` per bucket chunk. This scheduler
+replaces it with an event loop over three request states:
+
+    PENDING   admitted into a priority/deadline queue, grouped by the
+              power-of-two (n, p, form) bucket ladder of DESIGN.md §6.4;
+    IN-FLIGHT a bucket's stacked, padded, warm-started solve has been
+              dispatched to the device (JAX async dispatch: the Python
+              thread returns immediately and keeps admitting/coalescing
+              while the device computes);
+    COMPLETED `harvest()` touched the result arrays — the ONLY place
+              `jax.block_until_ready` appears — unpadded them, fed the
+              solutions back into the warm-start cache and recorded
+              completion latency.
+
+A bucket launches the moment it is FULL (`max_batch` requests coalesced) or
+its earliest member DEADLINE expires (`max_wait` after submission, per-
+request overridable) — so light traffic still meets latency targets while
+heavy traffic rides full vmapped executables. Solves go through
+`core.batch.sven_batch` / `core.api.enet_batch`, which means (a) steady-
+state traffic re-uses one compiled executable per (bucket, batch, form)
+shape — `trace_counts()` stays constant under load, asserted in CI — and
+(b) under an active `repro.dist.mesh_context` every stacked operand takes
+the rule table's "batch" axis placement, fanning buckets across the
+data-parallel mesh.
+
+Warm starts come from `runtime.cache.SolutionCache`: hits are handed to the
+stacked solve as initial iterates (zero rows = cold start, so mixed
+hit/miss batches keep a single executable) and every harvested solution is
+inserted back, closing the loop the paper's adjacent-lambda observation
+suggests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+import time
+from typing import Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import EnetCarry, PathConfig, enet_batch
+from repro.core.batch import sven_batch
+from repro.core.sven import SvenConfig
+from repro.runtime.cache import (CONSTRAINED, PENALIZED, SolutionCache,
+                                 WarmEntry, fingerprint_problem)
+from repro.runtime.metrics import LatencyRecorder
+
+
+def ceil_pow2(v: int, floor: int) -> int:
+    """Smallest power-of-two multiple of `floor` that is >= v."""
+    b = floor
+    while b < v:
+        b *= 2
+    return b
+
+
+def stack_padded(reqs, bn: int, bp: int, b_pad: int, dtype):
+    """Zero-pad and stack a bucket's requests into (B, bn, bp)/(B, bn) HOST
+    buffers — one allocation, one fill pass, one device transfer at the jit
+    boundary. Trailing batch slots stay all-zero: the X = 0, y = 0 dummy
+    problems that converge in O(1) solver iterations. (Per-request
+    `jnp.pad`+`jnp.stack` here costs more eager-dispatch time than the
+    solves being scheduled — host staging stays in numpy by design.)"""
+    Xb = np.zeros((b_pad, bn, bp), dtype)
+    yb = np.zeros((b_pad, bn), dtype)
+    for i, r in enumerate(reqs):
+        n, p = r.X.shape
+        Xb[i, :n, :p] = r.X
+        yb[i, :n] = r.y
+    return Xb, yb
+
+
+class EnResult(NamedTuple):
+    """Per-request solve result, unpadded back to the request's own p."""
+
+    beta: jax.Array           # (p,)
+    iters: jax.Array          # solver iterations spent (padded problem)
+    kkt: jax.Array            # EN KKT violation of the padded problem
+    bucket: tuple             # (n_bucket, p_bucket) executable this ran on
+
+
+@dataclasses.dataclass
+class RuntimeStats:
+    """Counters shared by the runtime scheduler and the engine facade."""
+
+    requests: int = 0
+    batches: int = 0          # stacked solves dispatched
+    bucket_shapes: int = 0    # distinct (n, p, B, form) executables compiled
+    padded_slots: int = 0     # batch slots occupied by padding problems
+    solve_seconds: float = 0.0  # host time blocked in harvest()
+    launched_full: int = 0    # launches because a bucket filled
+    launched_deadline: int = 0  # launches because a deadline expired
+    launched_flush: int = 0   # launches forced by flush()/drain()
+    # (cache hit/miss counters live on SolutionCache itself — one owner)
+
+
+@dataclasses.dataclass
+class EnRequest:
+    """One admitted problem; `lam` is t (constrained) or lambda1 (penalized).
+
+    X/y are held as HOST (numpy) arrays until their bucket launches — the
+    device sees one stacked transfer per batch, not one per request."""
+
+    req_id: int
+    X: np.ndarray
+    y: np.ndarray
+    form: str                 # CONSTRAINED | PENALIZED
+    lam: float
+    lambda2: float
+    priority: int
+    deadline: float
+    submitted: float
+    fingerprint: Optional[str]
+
+
+class _InFlight(NamedTuple):
+    """A dispatched (not yet harvested) stacked solve."""
+
+    key: tuple                # (bn, bp, form)
+    reqs: tuple               # the b_real EnRequests, slot order
+    beta: jax.Array           # (B, bp)
+    iters: jax.Array          # (B,)
+    kkt: jax.Array            # (B,)
+    alpha: jax.Array          # (B, 2*bp)
+    w: jax.Array              # (B, bn)
+    t_out: jax.Array          # (B,) |beta|_1 (penalized) or request t
+    nu_out: jax.Array         # (B,) measured multiplier (penalized only)
+
+
+def _urgency(req: EnRequest) -> tuple:
+    return (-req.priority, req.deadline, req.req_id)
+
+
+class ContinuousScheduler:
+    """Priority/deadline admission queue + bucket coalescing + async launch.
+
+    `max_wait` is the default coalescing window: a submitted request's
+    deadline is `now + max_wait`, and `poll()` launches its whole bucket
+    once any member's deadline passes (or earlier, the moment the bucket
+    holds `max_batch` requests). `max_wait=None` disables deadlines —
+    drain-on-demand, the seed engine's semantics. Per-request `deadline` /
+    `priority` override the default; higher priority solves first when a
+    bucket overflows.
+
+    `cache="default"` builds a private `SolutionCache`; pass None to serve
+    every request cold. `fixed_batch=True` pads every launch to the full
+    `max_batch` (instead of the power-of-two ladder), pinning the runtime
+    to exactly ONE executable per (bucket, form) — what the CI steady-state
+    zero-retrace assertion and the serve bench run with, since launch sizes
+    under deadline scheduling depend on wall-clock timing.
+    `auto_launch_full=False` disables the bucket-full trigger so NOTHING
+    launches before an explicit flush/drain/result — the engine facade's
+    drain-on-demand mode, which keeps `drain_reference()` a genuinely
+    synchronous baseline.
+    """
+
+    def __init__(self, config: SvenConfig = SvenConfig(), *,
+                 path_config: PathConfig = PathConfig(),
+                 max_batch: int = 64, min_n: int = 16, min_p: int = 8,
+                 max_wait: Optional[float] = 0.01,
+                 cache="default", fixed_batch: bool = False,
+                 auto_launch_full: bool = True,
+                 clock=time.perf_counter, dtype=jnp.float64):
+        if max_batch < 1 or min_n < 1 or min_p < 1:
+            raise ValueError(f"ContinuousScheduler: max_batch/min_n/min_p "
+                             f"must be >= 1 (got {max_batch}/{min_n}/{min_p})")
+        if max_wait is not None and max_wait < 0:
+            raise ValueError(f"ContinuousScheduler: max_wait must be >= 0 or "
+                             f"None (got {max_wait})")
+        self.config = config
+        self.path_config = path_config
+        self.max_batch = max_batch
+        self.min_n = min_n
+        self.min_p = min_p
+        self.max_wait = max_wait
+        self.cache = SolutionCache() if cache == "default" else cache
+        self.fixed_batch = fixed_batch
+        self.auto_launch_full = auto_launch_full
+        self.clock = clock
+        self.dtype = dtype
+        self.stats = RuntimeStats()
+        self.metrics = LatencyRecorder()
+        self._buckets: Dict[tuple, List[EnRequest]] = {}
+        self._deadlines: list = []       # heap of (deadline, req_id, key)
+        self._in_flight: List[_InFlight] = []
+        self._results: Dict[int, EnResult] = {}
+        self._next_id = 0
+        self._seen_shapes: set = set()
+
+    # -- admission ---------------------------------------------------------
+
+    def bucket_of(self, n: int, p: int) -> tuple:
+        return (ceil_pow2(n, self.min_n), ceil_pow2(p, self.min_p))
+
+    def submit(self, X, y, *, t: Optional[float] = None,
+               lambda1: Optional[float] = None, lambda2: float = 1.0,
+               priority: int = 0, deadline: Optional[float] = None) -> int:
+        """Admit one problem; exactly one of `t` (constrained form) and
+        `lambda1` (penalized form) must be given. Returns the request id.
+
+        Admission already polls, so a bucket that fills launches before
+        this call returns — queueing overlaps the device compute of
+        previously launched buckets (results are only touched in harvest).
+        """
+        X = np.asarray(X, self.dtype)
+        y = np.asarray(y, self.dtype)
+        if X.ndim != 2 or y.shape != (X.shape[0],):
+            raise ValueError(f"submit: bad shapes X{X.shape} y{y.shape}")
+        if (t is None) == (lambda1 is None):
+            raise ValueError("submit: give exactly one of t= and lambda1=")
+        if t is not None and not (t > 0 and lambda2 >= 0):
+            raise ValueError(f"submit: need t > 0, lambda2 >= 0 "
+                             f"(t={t}, lambda2={lambda2})")
+        if lambda1 is not None and not (lambda1 > 0 and lambda2 >= 0):
+            raise ValueError(f"submit: need lambda1 > 0, lambda2 >= 0 "
+                             f"(lambda1={lambda1}, lambda2={lambda2})")
+        now = self.clock()
+        if deadline is None:
+            deadline = math.inf if self.max_wait is None else now + self.max_wait
+        form = CONSTRAINED if t is not None else PENALIZED
+        req = EnRequest(
+            req_id=self._next_id, X=X, y=y, form=form,
+            lam=float(t if t is not None else lambda1), lambda2=float(lambda2),
+            priority=priority, deadline=deadline, submitted=now,
+            fingerprint=(fingerprint_problem(X, y) if self.cache is not None
+                         else None))
+        self._next_id += 1
+        key = self.bucket_of(*X.shape) + (form,)
+        self._buckets.setdefault(key, []).append(req)
+        heapq.heappush(self._deadlines, (deadline, req.req_id, key))
+        self.stats.requests += 1
+        self.metrics.submitted(req.req_id, now)
+        self.poll(now)
+        return req.req_id
+
+    @property
+    def pending_requests(self) -> List[EnRequest]:
+        """Admitted, not-yet-launched requests in submission order."""
+        reqs = [r for b in self._buckets.values() for r in b]
+        return sorted(reqs, key=lambda r: r.req_id)
+
+    @property
+    def in_flight_count(self) -> int:
+        return sum(len(inf.reqs) for inf in self._in_flight)
+
+    def take_pending(self) -> List[EnRequest]:
+        """Remove and return every pending request (the engine's reference
+        drain path pulls the queue through here)."""
+        reqs = self.pending_requests
+        self._buckets.clear()
+        self._deadlines.clear()
+        return reqs
+
+    def requeue(self, reqs: List[EnRequest]) -> None:
+        """Put requests back into the admission queue (failure recovery)."""
+        for r in reqs:
+            key = self.bucket_of(*r.X.shape) + (r.form,)
+            self._buckets.setdefault(key, []).append(r)
+            heapq.heappush(self._deadlines, (r.deadline, r.req_id, key))
+
+    # -- event loop --------------------------------------------------------
+
+    def poll(self, now: Optional[float] = None) -> int:
+        """Launch every full bucket and every bucket past its deadline;
+        opportunistically harvest in-flight batches whose arrays are ready
+        (without blocking). Returns the number of batches launched."""
+        if now is None:
+            now = self.clock()
+        launched = 0
+        if self.auto_launch_full:
+            for key in list(self._buckets):
+                while len(self._buckets.get(key, ())) >= self.max_batch:
+                    launched += self._launch_bucket(key, self.max_batch, "full")
+        while self._deadlines and self._deadlines[0][0] <= now:
+            deadline, rid, key = heapq.heappop(self._deadlines)
+            # lazy invalidation: an entry whose request already launched
+            # (bucket-full path, flush, result) must not fire the bucket
+            # early for LATER arrivals still inside their max_wait window
+            bucket = self._buckets.get(key)
+            if bucket and any(r.req_id == rid for r in bucket):
+                launched += self._launch_bucket(key, None, "deadline")
+                rest = self._buckets.get(key)
+                if rest and any(r.req_id == rid for r in rest):
+                    # priority sorting bumped this expired request out of
+                    # the launched chunk: re-arm its (already due) entry so
+                    # the loop immediately launches the remainder too
+                    heapq.heappush(self._deadlines, (deadline, rid, key))
+        ready = [inf for inf in self._in_flight if _batch_ready(inf)]
+        for inf in ready:
+            self._in_flight.remove(inf)
+            try:
+                self._complete(inf)
+            except Exception:
+                self._in_flight.append(inf)   # keep retryable, never drop
+                raise
+        return launched
+
+    def flush(self) -> int:
+        """Launch everything pending regardless of fill level or deadline."""
+        launched = 0
+        for key in list(self._buckets):
+            while self._buckets.get(key):
+                launched += self._launch_bucket(key, self.max_batch, "flush")
+        return launched
+
+    def harvest(self, *, block: bool = True) -> Dict[int, EnResult]:
+        """Complete in-flight batches (the one place results are awaited)
+        and return every unclaimed result, including earlier leftovers."""
+        pending = list(self._in_flight)
+        self._in_flight = []
+        try:
+            while pending:
+                inf = pending[0]
+                if not block and not _batch_ready(inf):
+                    self._in_flight.append(pending.pop(0))
+                    continue
+                self._complete(inf)     # idempotent: safe to retry on error
+                pending.pop(0)
+        except Exception:
+            # the failed batch AND the untouched ones stay live — a later
+            # harvest retries them; no request is ever dropped
+            self._in_flight.extend(pending)
+            raise
+        out, self._results = self._results, {}
+        return out
+
+    def drain(self) -> Dict[int, EnResult]:
+        """Flush + harvest: solve everything admitted, return all results."""
+        self.flush()
+        return self.harvest(block=True)
+
+    def result(self, req_id: int) -> EnResult:
+        """Block until one request's result is available and return it;
+        other completed results stay claimable by later harvests."""
+        if req_id in self._results:
+            return self._results.pop(req_id)
+        for key, bucket in list(self._buckets.items()):
+            if any(r.req_id == req_id for r in bucket):
+                while self._buckets.get(key):
+                    self._launch_bucket(key, self.max_batch, "flush")
+                break
+        for inf in list(self._in_flight):
+            if any(r.req_id == req_id for r in inf.reqs):
+                self._in_flight.remove(inf)
+                try:
+                    self._complete(inf)
+                except Exception:
+                    self._in_flight.append(inf)
+                    raise
+                break
+        if req_id not in self._results:
+            raise KeyError(f"result: unknown request id {req_id}")
+        return self._results.pop(req_id)
+
+    # -- launch ------------------------------------------------------------
+
+    def _launch_bucket(self, key: tuple, take: Optional[int],
+                       reason: str) -> int:
+        bucket = self._buckets[key]
+        bucket.sort(key=_urgency)
+        chunk = bucket[:take] if take is not None else bucket[:self.max_batch]
+        rest = bucket[len(chunk):]
+        if rest:
+            self._buckets[key] = rest
+        else:
+            del self._buckets[key]
+        try:
+            inf = self._dispatch(key, chunk)
+        except Exception:
+            # a failed dispatch must not lose the queue: put the chunk back
+            self._buckets.setdefault(key, [])[:0] = chunk
+            for r in chunk:
+                heapq.heappush(self._deadlines, (r.deadline, r.req_id, key))
+            raise
+        self._in_flight.append(inf)
+        now = self.clock()
+        self.metrics.launched([r.req_id for r in chunk], now)
+        self.stats.batches += 1
+        setattr(self.stats, f"launched_{reason}",
+                getattr(self.stats, f"launched_{reason}") + 1)
+        return 1
+
+    def _warm_arrays(self, reqs: List[EnRequest], bn: int, bp: int,
+                     b_pad: int, form: str):
+        """Stack cache hits into warm-start operands (zeros where cold).
+
+        Host (numpy) buffers filled in place; cached entries are stored as
+        numpy at harvest, so a hit is a memcpy, not a device round trip."""
+        alpha = np.zeros((b_pad, 2 * bp), self.dtype)
+        w = np.zeros((b_pad, bn), self.dtype)
+        beta = np.zeros((b_pad, bp), self.dtype)
+        t_prev = np.zeros((b_pad,), self.dtype)
+        nu_prev = np.zeros((b_pad,), self.dtype)
+        hot = np.zeros((b_pad,), bool)
+        if self.cache is not None:
+            for i, r in enumerate(reqs):
+                entry = self.cache.lookup(r.fingerprint, form, r.lam, r.lambda2)
+                if entry is not None:
+                    alpha[i], w[i], beta[i] = entry.alpha, entry.w, entry.beta
+                    t_prev[i], nu_prev[i] = entry.t, entry.nu
+                    hot[i] = True
+        return alpha, w, beta, t_prev, nu_prev, hot
+
+    def _dispatch(self, key: tuple, reqs: List[EnRequest]) -> _InFlight:
+        """Pad, stack, warm-start and launch one bucket — NO blocking: the
+        returned arrays are futures under JAX async dispatch."""
+        bn, bp, form = key
+        b_real = len(reqs)
+        b_pad = (self.max_batch if self.fixed_batch
+                 else min(ceil_pow2(b_real, 1), self.max_batch))
+        Xb, yb = stack_padded(reqs, bn, bp, b_pad, self.dtype)
+        fill = [1.0] * (b_pad - b_real)
+        lamb = np.asarray([r.lam for r in reqs] + fill, self.dtype)
+        l2b = np.asarray([r.lambda2 for r in reqs] + fill, self.dtype)
+        wa, ww, wb, wt, wnu, hot = self._warm_arrays(reqs, bn, bp, b_pad, form)
+
+        if form == PENALIZED:
+            warm = EnetCarry(beta=wb, alpha=wa, w=ww, t=wt, nu=wnu)
+            pts, carry = enet_batch(Xb, yb, lamb, l2b, self.path_config,
+                                    warm=warm, has_warm=hot, return_carry=True)
+            inf = _InFlight(key=key, reqs=tuple(reqs), beta=pts.beta,
+                            iters=pts.sven_iters, kkt=pts.kkt,
+                            alpha=carry.alpha, w=carry.w, t_out=pts.t,
+                            nu_out=pts.nu)
+        else:
+            sol = sven_batch(Xb, yb, lamb, l2b, self.config,
+                             warm_alpha=wa, warm_w=ww)
+            inf = _InFlight(key=key, reqs=tuple(reqs), beta=sol.beta,
+                            iters=sol.iters, kkt=sol.kkt, alpha=sol.alpha,
+                            w=sol.w, t_out=lamb, nu_out=jnp.zeros_like(lamb))
+        self.stats.padded_slots += b_pad - b_real
+        self._seen_shapes.add((bn, bp, b_pad, form))
+        self.stats.bucket_shapes = len(self._seen_shapes)
+        return inf
+
+    # -- completion --------------------------------------------------------
+
+    def _complete(self, inf: _InFlight) -> None:
+        """Await one batch, unpad per-request results, refill the cache.
+
+        The stacked device arrays are pulled to host ONCE and sliced in
+        numpy — per-request eager `Array.__getitem__` costs more dispatch
+        time than the solves themselves at serving batch sizes."""
+        t0 = self.clock()
+        jax.block_until_ready(inf.beta)
+        self.stats.solve_seconds += self.clock() - t0
+        beta, iters, kkt, alpha, w, t_out, nu_out = (
+            np.asarray(a) for a in (inf.beta, inf.iters, inf.kkt, inf.alpha,
+                                    inf.w, inf.t_out, inf.nu_out))
+        bn, bp, form = inf.key
+        for i, req in enumerate(inf.reqs):
+            p = req.X.shape[1]
+            self._results[req.req_id] = EnResult(
+                beta=beta[i, :p], iters=iters[i], kkt=kkt[i], bucket=(bn, bp))
+            if self.cache is not None:
+                self.cache.insert(req.fingerprint, form, WarmEntry(
+                    lam=req.lam, lambda2=req.lambda2, alpha=alpha[i],
+                    w=w[i], beta=beta[i], t=t_out[i], nu=nu_out[i]))
+        self.metrics.completed([r.req_id for r in inf.reqs], self.clock())
+
+
+def _batch_ready(inf: _InFlight) -> bool:
+    """True when a dispatched batch's arrays have landed (non-blocking)."""
+    try:
+        return bool(inf.beta.is_ready())
+    except AttributeError:     # older jax: no readiness probe, stay async
+        return False

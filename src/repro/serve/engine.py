@@ -4,15 +4,15 @@ LM side: prefill_step / decode_step builders (the functions the dry-run
 lowers for prefill_32k / decode_32k / long_500k cells) and a simple batched
 greedy generation driver for the examples.
 
-Elastic Net side: `ElasticNetEngine` — a shape-bucketed batch server that
-makes the paper's workload itself servable (DESIGN.md §6). Incoming
-(n, p) problems are padded up to a small ladder of power-of-two buckets, so
-arbitrary request shapes hit a bounded set of compiled executables; queued
-requests drain through `core.batch.sven_batch`, one vmapped solve per
-bucket. Padding is exact, not approximate: zero rows (with zero responses)
-add nothing to the Elastic Net objective, and zero columns provably carry
-beta_j = 0 through the SVM reduction, so the unpadded slice of the padded
-solution IS the original solution (tested against unpadded `sven`).
+Elastic Net side: `ElasticNetEngine` — the shape-bucketed batch server of
+DESIGN.md §6.4, now a facade over the continuous-batching runtime
+(`repro.runtime.scheduler`, DESIGN.md §8). Incoming (n, p) problems are
+padded up to a small ladder of power-of-two buckets, so arbitrary request
+shapes hit a bounded set of compiled executables. Padding is exact, not
+approximate: zero rows (with zero responses) add nothing to the Elastic Net
+objective, and zero columns provably carry beta_j = 0 through the SVM
+reduction, so the unpadded slice of the padded solution IS the original
+solution (tested against unpadded `sven`).
 
 The engine speaks both of the paper's problem forms: `submit` takes the
 constrained (t, lambda2) and `submit_penalized` the glmnet-style
@@ -20,13 +20,19 @@ constrained (t, lambda2) and `submit_penalized` the glmnet-style
 `core.api.enet_batch` (the vmapped multiplier root-find, DESIGN.md §7) and
 the same padding argument applies — zero columns are screened/zeroed and
 the dummy batch-fill problems (X = 0) short-circuit to beta = 0.
+
+`drain()` routes through the runtime scheduler: buckets dispatch
+asynchronously (overlapping with each other) with warm starts from the
+scheduler's solution cache, and results are awaited only at harvest.
+`drain_reference()` keeps the seed engine's synchronous path — one
+blocking, cold `sven_batch`/`enet_batch` call per bucket chunk — as the
+parity oracle the runtime is tested and benchmarked against
+(`benchmarks/bench_serve.py`).
 """
 from __future__ import annotations
 
-import dataclasses
 import time
-from functools import partial
-from typing import NamedTuple, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +41,12 @@ from repro.core.api import PathConfig, enet_batch
 from repro.core.batch import sven_batch
 from repro.core.sven import SvenConfig
 from repro.models import model as M
+from repro.runtime.cache import PENALIZED, SolutionCache
+from repro.runtime.scheduler import (ContinuousScheduler, EnResult,
+                                     RuntimeStats, ceil_pow2, stack_padded)
+
+#: Back-compat alias: the engine's stats ARE the runtime scheduler's.
+EngineStats = RuntimeStats
 
 
 def make_prefill_step(cfg: M.ModelConfig, max_len: int):
@@ -77,58 +89,29 @@ def greedy_generate(params, cfg: M.ModelConfig, batch: dict, *, steps: int,
 
 
 # ---------------------------------------------------------------------------
-# Elastic Net serving: shape-bucketed batch engine over sven_batch
+# Elastic Net serving: facade over the continuous-batching runtime
 # ---------------------------------------------------------------------------
-
-class EnResult(NamedTuple):
-    """Per-request solve result, unpadded back to the request's own p."""
-
-    beta: jax.Array           # (p,)
-    iters: jax.Array          # solver outer iterations (padded problem)
-    kkt: jax.Array            # EN KKT violation of the padded problem
-    bucket: tuple             # (n_bucket, p_bucket) executable this ran on
-
-
-@dataclasses.dataclass
-class EngineStats:
-    requests: int = 0
-    batches: int = 0          # sven_batch launches issued by drain()
-    bucket_shapes: int = 0    # distinct (n, p, B, form) executables compiled
-    padded_slots: int = 0     # batch slots occupied by padding problems
-    solve_seconds: float = 0.0
-
-
-class _Pending(NamedTuple):
-    req_id: int
-    X: jax.Array
-    y: jax.Array
-    t: float              # constrained form: L1 budget; penalized: unused
-    lambda2: float
-    lambda1: Optional[float] = None   # set => penalized-form request
-
-
-def _ceil_pow2(v: int, floor: int) -> int:
-    b = floor
-    while b < v:
-        b *= 2
-    return b
-
 
 class ElasticNetEngine:
     """Queue + bucket + drain server for Elastic Net solves.
 
-    `submit()` enqueues a problem and returns a request id; `drain()` groups
-    the queue by padded (n, p) bucket, stacks each group (batch dim padded to
-    a power of two, bounded by `max_batch`) and solves it with one
-    `sven_batch` call per chunk. Because t/lambda2 are traced operands and
-    shapes are bucketed, steady-state traffic runs entirely on cached
-    executables — `stats.bucket_shapes` counts the distinct shapes ever
-    compiled, which stays small and constant under load (tested).
+    `submit()` / `submit_penalized()` enqueue a problem and return a request
+    id; `drain()` solves everything queued through the runtime scheduler —
+    one asynchronously dispatched, warm-started `sven_batch`/`enet_batch`
+    per bucket chunk, awaited only at harvest. Because t/lambda2 are traced
+    operands and shapes are bucketed, steady-state traffic runs entirely on
+    cached executables — `stats.bucket_shapes` counts the distinct shapes
+    ever compiled, which stays small and constant under load (tested).
+
+    The engine is drain-on-demand (no deadlines): for latency-driven
+    continuous batching use `repro.runtime.ContinuousScheduler` directly
+    with a `max_wait` coalescing window, as `launch/serve_en.py` does.
     """
 
     def __init__(self, config: SvenConfig = SvenConfig(), *,
                  path_config: PathConfig = PathConfig(),
                  max_batch: int = 64, min_n: int = 16, min_p: int = 8,
+                 cache: Optional[SolutionCache] = "default",
                  dtype=jnp.float64):
         if max_batch < 1 or min_n < 1 or min_p < 1:
             raise ValueError(f"ElasticNetEngine: max_batch/min_n/min_p must be "
@@ -139,26 +122,35 @@ class ElasticNetEngine:
         self.min_n = min_n
         self.min_p = min_p
         self.dtype = dtype
-        self.stats = EngineStats()
-        self._queue: list[_Pending] = []
-        self._undelivered: dict = {}   # solved by solve() but not yet drained
-        self._next_id = 0
-        self._seen_shapes: set = set()
+        # drain-on-demand: no deadlines AND no bucket-full auto-launch, so
+        # nothing runs before an explicit drain/solve — which also keeps
+        # drain_reference() a genuinely synchronous, untouched-queue oracle
+        self._scheduler = ContinuousScheduler(
+            config, path_config=path_config, max_batch=max_batch,
+            min_n=min_n, min_p=min_p, max_wait=None, cache=cache,
+            auto_launch_full=False, dtype=dtype)
+
+    @property
+    def scheduler(self) -> ContinuousScheduler:
+        """The underlying runtime scheduler (deadlines disabled)."""
+        return self._scheduler
+
+    @property
+    def stats(self) -> RuntimeStats:
+        return self._scheduler.stats
+
+    @property
+    def cache(self) -> Optional[SolutionCache]:
+        return self._scheduler.cache
+
+    @property
+    def _queue(self):
+        return self._scheduler.pending_requests
 
     # -- request side ------------------------------------------------------
 
     def submit(self, X, y, t: float, lambda2: float) -> int:
-        X = jnp.asarray(X, self.dtype)
-        y = jnp.asarray(y, self.dtype)
-        if X.ndim != 2 or y.shape != (X.shape[0],):
-            raise ValueError(f"submit: bad shapes X{X.shape} y{y.shape}")
-        if not (t > 0 and lambda2 >= 0):
-            raise ValueError(f"submit: need t > 0, lambda2 >= 0 (t={t}, lambda2={lambda2})")
-        req_id = self._next_id
-        self._next_id += 1
-        self._queue.append(_Pending(req_id, X, y, float(t), float(lambda2)))
-        self.stats.requests += 1
-        return req_id
+        return self._scheduler.submit(X, y, t=t, lambda2=lambda2)
 
     def submit_penalized(self, X, y, lambda1: float, lambda2: float) -> int:
         """Enqueue a glmnet-style penalized request (DESIGN.md §7 front-end).
@@ -167,102 +159,90 @@ class ElasticNetEngine:
         drain through `core.api.enet_batch` — the vmapped multiplier
         root-find that maps (lambda1, lambda2) onto the constrained engine.
         """
-        X = jnp.asarray(X, self.dtype)
-        y = jnp.asarray(y, self.dtype)
-        if X.ndim != 2 or y.shape != (X.shape[0],):
-            raise ValueError(f"submit_penalized: bad shapes X{X.shape} y{y.shape}")
-        if not (lambda1 > 0 and lambda2 >= 0):
-            raise ValueError(f"submit_penalized: need lambda1 > 0, lambda2 >= 0 "
-                             f"(lambda1={lambda1}, lambda2={lambda2})")
-        req_id = self._next_id
-        self._next_id += 1
-        self._queue.append(_Pending(req_id, X, y, 0.0, float(lambda2),
-                                    lambda1=float(lambda1)))
-        self.stats.requests += 1
-        return req_id
+        return self._scheduler.submit(X, y, lambda1=lambda1, lambda2=lambda2)
 
     def solve(self, X, y, t: float, lambda2: float) -> EnResult:
-        """Submit + drain a single request (convenience / interactive path).
+        """Submit + solve a single request (convenience / interactive path).
 
-        Other pending requests ride along in the same drain; their results
-        are held and returned by the next `drain()` call, not lost.
+        Only this request's bucket is launched; same-bucket ride-alongs that
+        complete with it are held and returned by the next `drain()`.
         """
         req_id = self.submit(X, y, t, lambda2)
-        results = self.drain()
-        mine = results.pop(req_id)
-        self._undelivered.update(results)
-        return mine
+        return self._scheduler.result(req_id)
 
     # -- bucket side -------------------------------------------------------
 
     def bucket_of(self, n: int, p: int) -> tuple:
-        return (_ceil_pow2(n, self.min_n), _ceil_pow2(p, self.min_p))
-
-    def _pad_problem(self, req: _Pending, bn: int, bp: int):
-        n, p = req.X.shape
-        X = jnp.pad(req.X, ((0, bn - n), (0, bp - p)))
-        y = jnp.pad(req.y, (0, bn - n))
-        return X, y
-
-    def _dummy_problem(self, bn: int, bp: int):
-        # Solved alongside real requests to fill the batch to a power of two;
-        # X = 0, y = 0 converges in O(1) solver iterations.
-        return jnp.zeros((bn, bp), self.dtype), jnp.zeros((bn,), self.dtype)
+        return self._scheduler.bucket_of(n, p)
 
     # -- drain side --------------------------------------------------------
 
     def drain(self) -> dict:
         """Solve everything queued; returns {request_id: EnResult}, including
-        any results a previous `solve()` drained but did not deliver."""
-        queue, self._queue = self._queue, []
+        any results solved earlier but not yet delivered."""
+        return self._scheduler.drain()
+
+    def drain_reference(self) -> dict:
+        """The seed engine's synchronous drain: one blocking, COLD (no
+        warm-start cache) batched solve per bucket chunk, in bucket order.
+
+        Kept as the parity oracle for the runtime path: `drain()` and
+        `drain_reference()` return identical solutions to solver tolerance
+        (tested), and `benchmarks/bench_serve.py` measures the continuous
+        runtime's throughput against this baseline.
+        """
+        queue = self._scheduler.take_pending()
         groups: dict = {}
         for req in queue:
-            key = (self.bucket_of(*req.X.shape), req.lambda1 is not None)
+            key = self._scheduler.bucket_of(*req.X.shape) + (req.form,)
             groups.setdefault(key, []).append(req)
 
-        results, self._undelivered = self._undelivered, {}
+        results = self._scheduler.harvest(block=True)
         done_ids: set = set()
         try:
-            for ((bn, bp), pen), reqs in sorted(groups.items()):
+            for (bn, bp, form), reqs in sorted(groups.items()):
                 for lo in range(0, len(reqs), self.max_batch):
                     chunk = reqs[lo:lo + self.max_batch]
-                    self._drain_chunk(bn, bp, chunk, results, pen)
+                    self._drain_chunk(bn, bp, chunk, results,
+                                      form == PENALIZED)
                     done_ids.update(r.req_id for r in chunk)
         except Exception:
-            # A failed chunk must not lose the rest of the queue or results
-            # already held: re-queue unsolved requests, re-stash solved ones.
-            self._queue = [r for g in groups.values() for r in g
-                           if r.req_id not in done_ids] + self._queue
-            self._undelivered.update(results)
+            # A failed chunk must not lose the rest of the queue: re-queue
+            # unsolved requests (results already held stay claimable).
+            self._scheduler.requeue(
+                [r for g in groups.values() for r in g
+                 if r.req_id not in done_ids])
+            self._scheduler._results.update(results)
             raise
         return results
 
     def _drain_chunk(self, bn: int, bp: int, reqs: list, results: dict,
                      pen: bool = False) -> None:
+        sched = self._scheduler
         b_real = len(reqs)
-        b_pad = min(_ceil_pow2(b_real, 1), self.max_batch)
-        padded = [self._pad_problem(r, bn, bp) for r in reqs]
-        padded += [self._dummy_problem(bn, bp)] * (b_pad - b_real)
-        Xb = jnp.stack([x for x, _ in padded])
-        yb = jnp.stack([y for _, y in padded])
+        b_pad = min(ceil_pow2(b_real, 1), self.max_batch)
+        Xb, yb = stack_padded(reqs, bn, bp, b_pad, self.dtype)
         fill = [1.0] * (b_pad - b_real)
+        lamb = jnp.asarray([r.lam for r in reqs] + fill, self.dtype)
         l2b = jnp.asarray([r.lambda2 for r in reqs] + fill, self.dtype)
 
         t0 = time.perf_counter()
         if pen:
-            l1b = jnp.asarray([r.lambda1 for r in reqs] + fill, self.dtype)
             pts = jax.block_until_ready(
-                enet_batch(Xb, yb, l1b, l2b, self.path_config))
+                enet_batch(Xb, yb, lamb, l2b, self.path_config))
             betas, iters, kkts = pts.beta, pts.sven_iters, pts.kkt
         else:
-            tb = jnp.asarray([r.t for r in reqs] + fill, self.dtype)
-            sol = jax.block_until_ready(sven_batch(Xb, yb, tb, l2b, self.config))
+            sol = jax.block_until_ready(
+                sven_batch(Xb, yb, lamb, l2b, self.config))
             betas, iters, kkts = sol.beta, sol.iters, sol.kkt
-        self.stats.solve_seconds += time.perf_counter() - t0
-        self.stats.batches += 1
-        self.stats.padded_slots += b_pad - b_real
-        self._seen_shapes.add((bn, bp, b_pad, pen))
-        self.stats.bucket_shapes = len(self._seen_shapes)
+        now = time.perf_counter()
+        sched.stats.solve_seconds += now - t0
+        sched.stats.batches += 1
+        sched.stats.padded_slots += b_pad - b_real
+        sched._seen_shapes.add((bn, bp, b_pad, "ref-pen" if pen else "ref"))
+        sched.stats.bucket_shapes = len(sched._seen_shapes)
+        sched.metrics.launched([r.req_id for r in reqs], t0)
+        sched.metrics.completed([r.req_id for r in reqs], now)
 
         for i, req in enumerate(reqs):
             p = req.X.shape[1]

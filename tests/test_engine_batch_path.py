@@ -249,15 +249,27 @@ def test_solver_exits_promptly_on_nan():
 
 
 def test_engine_drain_failure_preserves_queue(monkeypatch):
+    """Both drain paths — the runtime scheduler's async dispatch and the
+    synchronous drain_reference — must re-queue on a failed launch."""
     X1, y1, t1 = _problem(21, 8, seed=71)
     engine = ElasticNetEngine()
     rid = engine.submit(X1, y1, t1, 1.0)
-    monkeypatch.setattr(engine, "_drain_chunk",
-                        lambda *a, **k: (_ for _ in ()).throw(RuntimeError("boom")))
+
+    def boom(*a, **k):
+        raise RuntimeError("boom")
+
+    monkeypatch.setattr(engine.scheduler, "_dispatch", boom)
     with pytest.raises(RuntimeError, match="boom"):
         engine.drain()
     assert [r.req_id for r in engine._queue] == [rid]  # nothing lost
     monkeypatch.undo()
+
+    monkeypatch.setattr(engine, "_drain_chunk", boom)
+    with pytest.raises(RuntimeError, match="boom"):
+        engine.drain_reference()
+    assert [r.req_id for r in engine._queue] == [rid]  # nothing lost
+    monkeypatch.undo()
+
     out = engine.drain()   # and the request is still solvable afterwards
     np.testing.assert_allclose(out[rid].beta, sven(X1, y1, t1, 1.0).beta,
                                atol=PATH_ATOL)
