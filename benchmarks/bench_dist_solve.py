@@ -1,0 +1,124 @@
+"""Sharded solve path vs single device (DESIGN.md §9): parity and speedup.
+
+Runs the production multi-device paths on a simulated 8-device host mesh in
+a subprocess (the bench process itself keeps its real device set) and emits
+the ``dist_solve`` section of BENCH_path.json:
+
+  - `sven_sharded` (rows of Zhat sharded, psum-reduced Gram / matvecs)
+    against single-device `sven` in both dual and primal regimes — the
+    parity numbers the <= 1e-10 acceptance gate checks;
+  - batch-axis sharding: the same stacked `sven_batch` launch with and
+    without a `dist.mesh_context`, wall-clock both ways.
+
+The artifact gate is SPEEDUP-OR-PARITY: simulated host devices share the
+machine's cores, so an N-way mesh on an M < N core runner may not beat one
+device — the gate then rests on exact parity (the sharded path must never
+be a different answer), while a real multi-core/multi-chip run must also
+show batch_speedup >= 1. `validate_artifact.py` enforces both.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from benchmarks.common import emit
+
+_CODE = textwrap.dedent("""
+    import json, os, time
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys; sys.path.insert(0, "src")
+    import jax, jax.numpy as jnp
+    jax.config.update("jax_enable_x64", True)
+    from repro import dist
+    from repro.core import sven, sven_batch, sven_sharded
+    from repro.data.synthetic import make_regression
+
+    n, p, B, reps = %(n)d, %(p)d, %(B)d, %(reps)d
+    mesh = dist.data_mesh()
+
+    def best_of(fn, reps):
+        jax.block_until_ready(fn())            # compile + warm
+        b = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            b = min(b, time.perf_counter() - t0)
+        return b
+
+    # --- single-problem parity + timing: dual (n >> p) and primal (2p > n)
+    Xd, yd, _ = make_regression(n, p, seed=0)
+    Xp_, yp_, _ = make_regression(max(p, 48), 2 * n // 3 + p, seed=1)
+    devs = []
+    s0d = sven(Xd, yd, 1.4, 1.0)
+    s1d = sven_sharded(Xd, yd, 1.4, 1.0, mesh=mesh)
+    devs.append(float(jnp.abs(s1d.beta - s0d.beta).max()))
+    s0p = sven(Xp_, yp_, 0.9, 0.8)
+    s1p = sven_sharded(Xp_, yp_, 0.9, 0.8, mesh=mesh)
+    devs.append(float(jnp.abs(s1p.beta - s0p.beta).max()))
+    solve_single = best_of(lambda: sven(Xd, yd, 1.4, 1.0).beta, reps)
+    solve_sharded = best_of(
+        lambda: sven_sharded(Xd, yd, 1.4, 1.0, mesh=mesh).beta, reps)
+
+    # --- batch-axis sharding: one stacked launch, with/without the mesh
+    Xb = jnp.stack([make_regression(n, p, seed=7 + i)[0] for i in range(B)])
+    yb = jnp.stack([make_regression(n, p, seed=7 + i)[1] for i in range(B)])
+    tb = jnp.linspace(0.8, 1.6, B)
+    l2b = jnp.full((B,), 1.0)
+    sol_single = sven_batch(Xb, yb, tb, l2b)
+    with dist.mesh_context(mesh):
+        sol_sharded = sven_batch(Xb, yb, tb, l2b)
+    dev_batch = float(jnp.abs(sol_sharded.beta - sol_single.beta).max())
+    batch_single = best_of(lambda: sven_batch(Xb, yb, tb, l2b).beta, reps)
+    def sharded_batch():
+        with dist.mesh_context(mesh):
+            return sven_batch(Xb, yb, tb, l2b).beta
+    batch_sharded = best_of(sharded_batch, reps)
+
+    out = {
+        "devices": jax.device_count(),
+        "n": n, "p": p, "grid_B": B,
+        "solve_single_seconds": solve_single,
+        "solve_sharded_seconds": solve_sharded,
+        "solve_speedup": solve_single / max(solve_sharded, 1e-12),
+        "batch_single_seconds": batch_single,
+        "batch_sharded_seconds": batch_sharded,
+        "batch_speedup": batch_single / max(batch_sharded, 1e-12),
+        "max_dev_sharded_solve": max(devs),
+        "max_dev_sharded_batch": dev_batch,
+    }
+    out["speedup_or_parity"] = bool(
+        out["batch_speedup"] >= 1.0
+        or (out["max_dev_sharded_solve"] <= 1e-10
+            and out["max_dev_sharded_batch"] <= 1e-10))
+    print("DIST_SOLVE_JSON=" + json.dumps(out))
+""")
+
+
+def run(n: int = 768, p: int = 48, B: int = 8, reps: int = 3) -> dict:
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = "src"
+    code = _CODE % {"n": n, "p": p, "B": B, "reps": reps}
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=1200, env=env)
+    if r.returncode != 0:
+        raise RuntimeError(f"bench_dist_solve subprocess failed:\n"
+                           f"{r.stdout}\n{r.stderr}")
+    line = [l for l in r.stdout.splitlines()
+            if l.startswith("DIST_SOLVE_JSON=")][-1]
+    result = json.loads(line.split("=", 1)[1])
+    emit("dist_batch_sharded_vs_single", result["batch_sharded_seconds"],
+         f"devices={result['devices']} B={B} n={n} p={p} "
+         f"speedup={result['batch_speedup']:.2f}x "
+         f"max_dev={max(result['max_dev_sharded_solve'], result['max_dev_sharded_batch']):.2e}")
+    emit("dist_solve_sharded_vs_single", result["solve_sharded_seconds"],
+         f"devices={result['devices']} n={n} p={p} "
+         f"speedup={result['solve_speedup']:.2f}x")
+    return result
+
+
+if __name__ == "__main__":
+    print(run(n=384, p=32, reps=2))

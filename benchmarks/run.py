@@ -28,9 +28,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_batch, bench_crossover, bench_cv,
-                            bench_distributed, bench_lm_smoke, bench_nggp,
-                            bench_path, bench_pggn, bench_reduction_ops,
-                            bench_serve)
+                            bench_dist_solve, bench_distributed,
+                            bench_lm_smoke, bench_nggp, bench_path,
+                            bench_pggn, bench_reduction_ops, bench_serve)
 
     mods = {
         "path": (lambda: bench_path.run(points=6)) if args.quick else bench_path.run,
@@ -38,6 +38,8 @@ def main() -> None:
         "cv": (lambda: bench_cv.run(k=4, n_lambdas=8)) if args.quick else bench_cv.run,
         "serve": ((lambda: bench_serve.run(requests=24, reps=2))
                   if args.quick else bench_serve.run),
+        "dist_solve": ((lambda: bench_dist_solve.run(n=384, p=32, reps=2))
+                       if args.quick else bench_dist_solve.run),
         "reduction_ops": bench_reduction_ops.run,
         "crossover": bench_crossover.run,
         "pggn": (lambda: bench_pggn.run(points=2)) if args.quick else bench_pggn.run,
@@ -52,7 +54,8 @@ def main() -> None:
     for name in picked:
         try:
             out = mods[name]()
-            if name in ("path", "batch", "cv", "serve") and isinstance(out, dict):
+            if (name in ("path", "batch", "cv", "serve", "dist_solve")
+                    and isinstance(out, dict)):
                 artifact[name] = out
         except Exception:  # noqa: BLE001
             failures += 1

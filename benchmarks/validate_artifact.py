@@ -1,12 +1,15 @@
 """Validate the BENCH_path.json artifact emitted by ``benchmarks/run.py``.
 
-Checks both shape (every section the path/batch/cv/serve benches write
-carries its full key set) and the engine invariants CI cares about:
-single-trace scans, no retrace on new grid values (incl. steady-state
-serving), exactness vs the sequential / coordinate-descent oracles, batched
-CV at least matching the sequential loop, and the continuous-batching
-runtime sustaining >= 2x the synchronous drain_reference throughput with
-warm-start cache hits under the adjacent-lambda load.
+Checks both shape (every section the path/batch/cv/serve/dist_solve benches
+write carries its full key set) and the engine invariants CI cares about:
+single-trace scans, no retrace on new grid values (steady-state serving is
+gated on per-entry-point trace DELTAS between warmup and the measured
+passes), exactness vs the sequential / coordinate-descent oracles, batched
+CV at least matching the sequential loop, the continuous-batching runtime
+sustaining >= 2x the synchronous drain_reference throughput with warm-start
+cache hits under the adjacent-lambda load, and the sharded solve path at
+<= 1e-10 parity with (and speedup-or-parity against) the single-device
+path on the 8-device host mesh.
 
     python benchmarks/validate_artifact.py [BENCH_path.json]
 """
@@ -36,8 +39,15 @@ REQUIRED_KEYS = {
         "n_requests", "concurrency", "runtime_seconds", "reference_seconds",
         "runtime_req_per_s", "reference_req_per_s", "throughput_vs_reference",
         "p50_latency_s", "p99_latency_s", "cache_hit_rate", "cache_hits",
-        "steady_state_trace_count", "steady_state_traces_constant",
-        "bucket_executables", "max_dev_vs_direct",
+        "warmup_trace_count", "steady_state_trace_deltas",
+        "steady_state_traces_constant", "bucket_executables",
+        "max_dev_vs_direct",
+    },
+    "dist_solve": {
+        "devices", "n", "p", "grid_B", "solve_single_seconds",
+        "solve_sharded_seconds", "solve_speedup", "batch_single_seconds",
+        "batch_sharded_seconds", "batch_speedup", "max_dev_sharded_solve",
+        "max_dev_sharded_batch", "speedup_or_parity",
     },
 }
 
@@ -56,8 +66,9 @@ def validate(artifact: dict) -> list:
         if section in artifact and not cond:
             errors.append(f"{section}: {msg} ({artifact[section]})")
 
-    path, batch, cv, serve = (artifact.get(s, {})
-                              for s in ("path", "batch", "cv", "serve"))
+    path, batch, cv, serve, dist_solve = (
+        artifact.get(s, {})
+        for s in ("path", "batch", "cv", "serve", "dist_solve"))
     check("path", path.get("scan_trace_count") == 1,
           "regularization-path scan must compile exactly once")
     check("path", not path.get("retraced_on_new_grid_values"),
@@ -82,10 +93,19 @@ def validate(artifact: dict) -> list:
           "drain_reference throughput")
     check("serve", serve.get("cache_hits", 0) > 0,
           "adjacent-lambda load produced no warm-start cache hits")
+    check("serve", serve.get("steady_state_trace_deltas", {"_": 1}) == {},
+          "measured serving passes added traces over the warmup snapshot")
     check("serve", serve.get("steady_state_traces_constant") is True,
           "steady-state serving retraced")
     check("serve", serve.get("max_dev_vs_direct", 1.0) < 1e-6,
           "runtime solves diverged from direct sven()/enet()")
+    check("dist_solve", dist_solve.get("max_dev_sharded_solve", 1.0) <= 1e-10,
+          "sharded sven diverged from the single-device solve")
+    check("dist_solve", dist_solve.get("max_dev_sharded_batch", 1.0) <= 1e-10,
+          "mesh-placed sven_batch diverged from the single-device launch")
+    check("dist_solve", dist_solve.get("speedup_or_parity") is True,
+          "sharded path is neither faster than nor exactly at parity with "
+          "the single-device path")
     return errors
 
 
@@ -97,11 +117,16 @@ def main() -> None:
         for e in errors:
             print(f"[validate_artifact] FAIL: {e}")
         sys.exit(1)
+    ds = artifact.get("dist_solve")
+    dist_note = (f", dist batch {ds['batch_speedup']:.2f}x on "
+                 f"{ds['devices']} devices "
+                 f"(max dev {ds['max_dev_sharded_solve']:.1e})" if ds else "")
     print(f"[validate_artifact] {fname} OK: "
           f"path scan {artifact['path']['scan_vs_loop_speedup']:.2f}x, "
           f"cv batched {artifact['cv']['cv_batched_vs_sequential_speedup']:.2f}x, "
           f"serve {artifact['serve']['throughput_vs_reference']:.2f}x "
-          f"(hit rate {artifact['serve']['cache_hit_rate']:.2f})")
+          f"(hit rate {artifact['serve']['cache_hit_rate']:.2f})"
+          f"{dist_note}")
 
 
 if __name__ == "__main__":

@@ -27,6 +27,11 @@ from repro.core.reduction import (
     svm_C,
 )
 from repro.core import elastic_net
+from repro.core.distributed import (
+    sharded_gram_stats,
+    sharded_hinge_stats,
+    sven_sharded,
+)
 from repro.core.screening import gap_safe_screen, sven_with_screening
 from repro.core.api import (
     ElasticNet,
@@ -71,6 +76,11 @@ __all__ = [
     "elastic_net",
     "gap_safe_screen",
     "sven_with_screening",
+    # data-parallel sharded solve path (core/distributed.py, DESIGN.md §9)
+    "sven_sharded",
+    "sharded_gram_stats",
+    "sharded_hinge_stats",
+
     # glmnet-parity penalized front-end (core/api.py, core/cv.py)
     "ElasticNet",
     "ElasticNetCV",

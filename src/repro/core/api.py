@@ -47,7 +47,7 @@ import jax.numpy as jnp
 
 from repro.core import elastic_net as en
 from repro.core.screening import gap_safe_screen
-from repro.core.sven import SvenConfig, _bump_trace, _sven_core
+from repro.core.sven import SvenConfig, _bump_trace, _sven_core, resolve_backend
 
 
 # ---------------------------------------------------------------------------
@@ -155,6 +155,15 @@ class PathConfig:
     max_evals: int = 30        # Illinois iterations == SVEN solves per point
     t_floor_rel: float = 1e-7  # smallest bracketed t, relative to |ridge|_1
     f_rtol: float = 1e-9       # |nu - lambda1| stop, relative to lambda1_max
+
+
+def resolve_path_config(config: PathConfig, *arrays) -> PathConfig:
+    """Pin the nested SvenConfig's Pallas interpret choice before tracing
+    (see `core.sven.resolve_backend`); a no-op for the XLA backend."""
+    solver = resolve_backend(config.solver, *arrays)
+    if solver is config.solver:
+        return config
+    return dataclasses.replace(config, solver=solver)
 
 
 class EnetCarry(NamedTuple):
@@ -333,11 +342,7 @@ def _enet_path_scan(X, y, lambda1s, lambda2, config: PathConfig) -> EnetPoint:
     return points
 
 
-@partial(jax.jit, static_argnames=("config", "axes"))
-def _enet_batch_jit(X, y, lambda1, lambda2, warm, has_warm,
-                    config: PathConfig, axes) -> EnetPoint:
-    _bump_trace("enet_batch")
-
+def _enet_solve_one(config: PathConfig):
     def one(X_, y_, l1_, l2_, warm_, hw_):
         carry = cold_carry(X_, y_)
         if warm_ is not None:
@@ -346,8 +351,34 @@ def _enet_batch_jit(X, y, lambda1, lambda2, warm, has_warm,
             carry = jax.tree.map(
                 lambda w, c: jnp.where(hw_, w.astype(c.dtype), c), warm_, carry)
         return _enet_point(X_, y_, l1_, l2_, carry, config)
+    return one
 
-    return jax.vmap(one, in_axes=axes)(X, y, lambda1, lambda2, warm, has_warm)
+
+@partial(jax.jit, static_argnames=("config", "axes"))
+def _enet_batch_jit(X, y, lambda1, lambda2, warm, has_warm,
+                    config: PathConfig, axes) -> EnetPoint:
+    from repro.core.batch import solve_lanes
+
+    _bump_trace("enet_batch")
+    return solve_lanes(_enet_solve_one(config),
+                       (X, y, lambda1, lambda2, warm, has_warm), axes)
+
+
+@partial(jax.jit, static_argnames=("config", "axes", "mesh"))
+def _enet_batch_sharded_jit(X, y, lambda1, lambda2, warm, has_warm,
+                            config: PathConfig, axes, mesh) -> EnetPoint:
+    """Penalized stack over the batch axis via `batch.shard_map_lanes`:
+    each device runs its local lanes' whole multiplier root-find with ZERO
+    collectives — solver while_loops never synchronize across devices."""
+    from repro.core.batch import shard_map_lanes, solve_lanes
+
+    _bump_trace("enet_batch")
+
+    def local(*ops):
+        return solve_lanes(_enet_solve_one(config), ops, axes)
+
+    return shard_map_lanes(mesh, axes, local,
+                           (X, y, lambda1, lambda2, warm, has_warm))
 
 
 def enet_batch(X, y, lambda1s, lambda2s,
@@ -371,7 +402,7 @@ def enet_batch(X, y, lambda1s, lambda2s,
     points (the state the runtime stores for the NEXT adjacent request);
     default is points only.
     """
-    from repro.core.batch import _maybe_shard_batch
+    from repro.core.batch import _maybe_shard_batch, batch_mesh
 
     X = jnp.asarray(X)
     dtype = X.dtype
@@ -399,8 +430,19 @@ def enet_batch(X, y, lambda1s, lambda2s,
     X, y, lambda1s, lambda2s = (
         _maybe_shard_batch(op, ax == 0)
         for op, ax in zip((X, y, lambda1s, lambda2s), axes[:4]))
-    carry, points = _enet_batch_jit(X, y, lambda1s, lambda2s, warm, has_warm,
-                                    config, axes)
+    if warm is not None:
+        warm = EnetCarry(*(_maybe_shard_batch(jnp.asarray(f), True)
+                           for f in warm))
+        has_warm = _maybe_shard_batch(has_warm, True)
+    config = resolve_path_config(config, X, y)
+    mesh = batch_mesh(next(iter(sizes)))
+    if mesh is not None:
+        carry, points = _enet_batch_sharded_jit(X, y, lambda1s, lambda2s,
+                                                warm, has_warm, config, axes,
+                                                mesh)
+    else:
+        carry, points = _enet_batch_jit(X, y, lambda1s, lambda2s, warm,
+                                        has_warm, config, axes)
     return (points, carry) if return_carry else points
 
 
@@ -441,6 +483,7 @@ def enet(X, y, lambda1, lambda2, *, standardize: bool = False,
     y = jnp.asarray(y, X.dtype)
     Xs, ys, scaler = standardize_fit(X, y, standardize=standardize,
                                      fit_intercept=fit_intercept)
+    config = resolve_path_config(config, Xs, ys)
     _, pt = _enet_jit(Xs, ys, jnp.asarray(lambda1, X.dtype),
                       jnp.asarray(lambda2, X.dtype), cold_carry(Xs, ys), config)
     beta, intercept = unscale_coef(pt.beta, scaler)
@@ -469,6 +512,7 @@ def enet_path(X, y, *, lambda1s=None, n_lambdas: int = 40,
     if lambda1s is None:
         lambda1s = lambda_grid(Xs, ys, n_lambdas=n_lambdas, eps=eps)
     lambda1s = jnp.asarray(lambda1s, X.dtype)
+    config = resolve_path_config(config, Xs, ys)
     pts = _enet_path_scan(Xs, ys, lambda1s, jnp.asarray(lambda2, X.dtype), config)
     betas, intercepts = unscale_coef(pts.beta, scaler)
     return EnetPath(lambda1s=lambda1s, lambda2=float(lambda2), betas=betas,

@@ -11,10 +11,13 @@ three stacking patterns the serving layer needs all go through here:
     k-fold CV          X (B, n_tr, p), y (B, n_tr)              [cv_folds]
 
 Any subset of {X, y, t, lambda2} may carry the batch axis; the rest
-broadcast. Under an active `repro.dist.mesh_context` the stacked inputs are
-placed with the rule table's "batch" axis before entering jit, so the
-compiled executable fans problems out across the data-parallel mesh axis —
-the same rules that shard LM training batches shard solver workloads.
+broadcast. Under an active `repro.dist.mesh_context` whose size divides the
+batch, the solve runs as a shard_map over the batch axis (DESIGN.md §9.2):
+each device vmaps its OWN local lanes with zero collectives — the same
+rules that shard LM training batches shard solver workloads, without the
+per-iteration while_loop synchronization a partitioner-sharded vmap would
+pay. Any other mesh/batch combination falls back to the single-device
+executable.
 """
 from __future__ import annotations
 
@@ -26,7 +29,8 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding
 
 from repro import dist
-from repro.core.sven import SvenArrays, SvenConfig, _bump_trace, _sven_core
+from repro.core.sven import (SvenArrays, SvenConfig, _bump_trace, _sven_core,
+                             resolve_backend)
 
 
 class SvenBatchSolution(NamedTuple):
@@ -40,21 +44,92 @@ class SvenBatchSolution(NamedTuple):
     kkt: jax.Array            # (B,)
 
 
+def solve_lanes(solve_one, operands: tuple, axes: tuple):
+    """Vmap `solve_one` over the stacked lanes of `operands` (pytrees; ax
+    == 0 marks a batched operand). A width-1 stack skips vmap entirely —
+    vmap rewrites every nested while_loop into its masked batched form,
+    ~2.4x slower than the plain loops even at width 1. The ONE lane-solve
+    implementation: both the constrained and the penalized batch entry
+    points (and their shard_map bodies) route through here."""
+    widths = {leaf.shape[0]
+              for op, ax in zip(operands, axes) if ax == 0 and op is not None
+              for leaf in jax.tree.leaves(op)}
+    if widths == {1}:
+        ops1 = tuple(jax.tree.map(lambda a: a[0], op) if ax == 0 else op
+                     for op, ax in zip(operands, axes))
+        return jax.tree.map(lambda a: jnp.expand_dims(a, 0),
+                            solve_one(*ops1))
+    return jax.vmap(solve_one, in_axes=axes)(*operands)
+
+
+def shard_map_lanes(mesh, axes: tuple, local, operands: tuple):
+    """shard_map a stacked solve over the batch axis (DESIGN.md §9.2).
+
+    Problems are independent, so each device runs `local` on ITS OWN lane
+    block with ZERO collectives — crucially the solver while_loops stay
+    per-device (a batch-sharded vmap under the partitioner turns every
+    while_loop condition into a cross-device all-reduce per iteration,
+    orders of magnitude slower). Batched operands (ax == 0) shard dim 0
+    over every mesh axis, the rest replicate; every output carries the
+    leading batch axis.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    data_axes = tuple(mesh.axis_names)
+    in_specs = tuple(P(data_axes) if ax == 0 else P() for ax in axes)
+    return shard_map(local, mesh=mesh, in_specs=in_specs,
+                     out_specs=P(data_axes), check_rep=False)(*operands)
+
+
+def _sven_solve_one(config: SvenConfig):
+    def solve_one(X_, y_, t_, l2_, keep_, wa_, ww_):
+        return _sven_core(X_, y_, t_, l2_, wa_, ww_, config, keep_)
+    return solve_one
+
+
 @partial(jax.jit, static_argnames=("config", "axes"))
 def _sven_batch_jit(X, y, t, lambda2, keep, warm_alpha, warm_w,
                     config: SvenConfig, axes) -> SvenArrays:
     _bump_trace("sven_batch")
-
-    def solve_one(X_, y_, t_, l2_, keep_, wa_, ww_):
-        return _sven_core(X_, y_, t_, l2_, wa_, ww_, config, keep_)
-
-    return jax.vmap(solve_one, in_axes=axes)(X, y, t, lambda2, keep,
-                                             warm_alpha, warm_w)
+    return solve_lanes(_sven_solve_one(config),
+                       (X, y, t, lambda2, keep, warm_alpha, warm_w), axes)
 
 
-def _maybe_shard_batch(arr: jax.Array, batched: bool) -> jax.Array:
-    """Place a stacked operand with the rule table's "batch" axis (dim 0)."""
+@partial(jax.jit, static_argnames=("config", "axes", "mesh"))
+def _sven_batch_sharded_jit(X, y, t, lambda2, keep, warm_alpha, warm_w,
+                            config: SvenConfig, axes, mesh) -> SvenArrays:
+    _bump_trace("sven_batch")
+
+    def local(*ops):
+        return solve_lanes(_sven_solve_one(config), ops, axes)
+
+    return shard_map_lanes(mesh, axes, local,
+                           (X, y, t, lambda2, keep, warm_alpha, warm_w))
+
+
+def batch_mesh(batch_size: int):
+    """The mesh the innermost `dist.mesh_context` provides for batch-axis
+    fan-out, or None when there is no context, the mesh is a single device,
+    or it does not divide `batch_size` (graceful single-device fallback)."""
     ctx = dist.current_context()
+    if ctx is None:
+        return None
+    mesh = ctx[0]
+    if mesh.size <= 1 or batch_size % mesh.size != 0:
+        return None
+    return mesh
+
+
+def _maybe_shard_batch(arr: jax.Array, batched: bool, ctx=None) -> jax.Array:
+    """Place a stacked operand with the rule table's "batch" axis (dim 0).
+
+    `ctx` is an explicit (mesh, rules) pair; default is the innermost
+    `dist.mesh_context` (no context, no placement). The one implementation
+    of batch-axis placement — CV fold placement routes through here too.
+    """
+    if ctx is None:
+        ctx = dist.current_context()
     if ctx is None or not batched:
         return arr
     mesh, rules = ctx
@@ -114,10 +189,17 @@ def sven_batch(
     if len(sizes) != 1:
         raise ValueError(f"sven_batch: inconsistent batch sizes {sorted(sizes)}")
 
-    X, y, t, lambda2 = (_maybe_shard_batch(op, ax == 0)
-                        for op, ax in zip(operands[:4], axes[:4]))
-    arrs = _sven_batch_jit(X, y, t, lambda2, keep, warm_alpha, warm_w,
-                           config, axes)
+    X, y, t, lambda2, keep, warm_alpha, warm_w = (
+        _maybe_shard_batch(op, ax == 0) if op is not None else None
+        for op, ax in zip(operands, axes))
+    config = resolve_backend(config, X, y)
+    mesh = batch_mesh(next(iter(sizes)))
+    if mesh is not None:
+        arrs = _sven_batch_sharded_jit(X, y, t, lambda2, keep, warm_alpha,
+                                       warm_w, config, axes, mesh)
+    else:
+        arrs = _sven_batch_jit(X, y, t, lambda2, keep, warm_alpha, warm_w,
+                               config, axes)
     return SvenBatchSolution(beta=arrs.beta, alpha=arrs.alpha, w=arrs.w,
                              iters=arrs.iters, opt_residual=arrs.opt_residual,
                              kkt=arrs.kkt)

@@ -24,12 +24,13 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import dist
 from repro.core import api
 from repro.core.batch import cv_folds
 from repro.core.sven import _bump_trace
 
 
-def _auto_fold_chunk(k: int) -> int:
+def _auto_fold_chunk(k: int, mesh=None) -> int:
     """Right-size the scan-of-vmap: how many folds advance in vmap lockstep.
 
     A vmapped `while_loop` costs the MAX trip count across lanes at every
@@ -38,12 +39,76 @@ def _auto_fold_chunk(k: int) -> int:
     after another (BENCH_path.json's cv section tracks this). chunk=1 keeps
     everything inside ONE executable — an outer `lax.scan` over folds, no
     per-fold dispatch — which is what beats the host-side per-fold loop on
-    CPU; with real batch parallelism (accelerator backends or a multi-device
-    mesh feeding the "batch" rule-table axis) the full-width vmap wins.
+    CPU.
+
+    The decision keys on where the FOLDS ARE PLACED, not on process-global
+    device counts: with a (>1)-device `mesh` carrying the fold axis, every
+    device advances its own fold subset and the full-width vmap wins; the
+    mere existence of extra devices the folds don't live on (the old
+    heuristic) buys nothing. Non-CPU backends keep the full-width vmap
+    even on one device (batch parallelism in the hardware).
     """
-    if jax.default_backend() != "cpu" or jax.device_count() > 1:
+    if mesh is not None and mesh.size > 1:
+        return k
+    if jax.default_backend() != "cpu":
         return k
     return 1
+
+
+def _resolve_cv_mesh(mesh, k: int):
+    """mesh="auto" -> the innermost dist context, else a device-spanning
+    data mesh, else None; any mesh whose size does not divide k falls back
+    to None (replicated folds would just pay collective overhead)."""
+    if mesh == "auto":
+        ctx = dist.current_context()
+        if ctx is not None:
+            mesh = ctx[0]
+        elif jax.device_count() > 1:
+            mesh = dist.data_mesh()
+        else:
+            mesh = None
+    if mesh is not None and (mesh.size <= 1 or k % mesh.size != 0):
+        return None
+    return mesh
+
+
+def _place_folds(mesh, *arrays):
+    """Shard the leading (fold) axis of each stacked array over `mesh` via
+    the one batch-axis placement implementation (`_maybe_shard_batch`);
+    rules come from the active context when it carries this mesh."""
+    from repro.core.batch import _maybe_shard_batch
+
+    ctx = dist.current_context()
+    rules = (ctx[1] if ctx is not None and ctx[0] is mesh
+             else dict(dist.DEFAULT_RULES))
+    return tuple(_maybe_shard_batch(a, True, (mesh, rules)) for a in arrays)
+
+
+@partial(jax.jit, static_argnames=("config", "fold_chunk", "mesh"))
+def _enet_cv_scan_sharded(Xtr, ytr, Xva, yva, lambda1s, lambda2,
+                          config: api.PathConfig, fold_chunk: int, mesh):
+    """Device-parallel CV: the fold axis shard_mapped over the mesh.
+
+    Each device runs `_enet_cv_scan` on ITS OWN fold block with zero
+    collectives — in particular the solver while_loops never synchronize
+    across devices (a fold-sharded vmap under the partitioner would
+    all-reduce every loop condition, orders of magnitude slower).
+    `fold_chunk` is the PER-DEVICE lockstep width; with one fold per device
+    it is 1, which `_enet_cv_scan` special-cases to the plain un-vmapped
+    loops: full device parallelism AND no masked-lockstep penalty.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    axes = tuple(mesh.axis_names)
+
+    def local(Xt, yt, Xv, yv, l1, l2):
+        return _enet_cv_scan(Xt, yt, Xv, yv, l1, l2, config, fold_chunk)
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(P(axes), P(axes), P(axes), P(axes), P(), P()),
+                     out_specs=(P(None, axes),) * 3, check_rep=False)(
+                         Xtr, ytr, Xva, yva, lambda1s, lambda2)
 
 
 @partial(jax.jit, static_argnames=("config", "fold_chunk"))
@@ -121,7 +186,7 @@ class CVResult(NamedTuple):
 def cross_validate(X, y, *, k: int = 5, lambda1s=None, n_lambdas: int = 40,
                    eps: Optional[float] = None, lambda2=1.0,
                    standardize: bool = True, fit_intercept: bool = True,
-                   fold_chunk: Optional[int] = None,
+                   fold_chunk: Optional[int] = None, mesh="auto",
                    config: api.PathConfig = api.PathConfig()) -> CVResult:
     """K-fold CV over the lambda grid, batched across folds; refit at the min.
 
@@ -131,9 +196,18 @@ def cross_validate(X, y, *, k: int = 5, lambda1s=None, n_lambdas: int = 40,
     because the scaler is global.
 
     `fold_chunk` sets how many folds advance in vmap lockstep (must divide
-    k); the default picks per backend — all k on accelerators / multi-device
-    meshes, 1 (a pure scan, still one executable) on a single CPU device,
-    where lockstep loses (see `_auto_fold_chunk`).
+    k); the default picks per PLACEMENT — all k when the folds are sharded
+    over a multi-device mesh or on accelerator backends, 1 (a pure scan,
+    still one executable) on a single CPU device, where lockstep loses
+    (see `_auto_fold_chunk`). On the sharded path the knob applies PER
+    DEVICE (each holds k/mesh.size folds); an explicit chunk the local
+    fold block cannot honor exactly disables the mesh rather than being
+    silently overridden.
+
+    `mesh` places the stacked fold axis: "auto" resolves the innermost
+    `dist.mesh_context`, else a data mesh over the visible devices, else
+    single-device; a mesh whose size does not divide k falls back to
+    single-device placement (results are identical either way — tested).
     """
     X = jnp.asarray(X)
     y = jnp.asarray(y, X.dtype)
@@ -144,14 +218,39 @@ def cross_validate(X, y, *, k: int = 5, lambda1s=None, n_lambdas: int = 40,
     lambda1s = jnp.asarray(lambda1s, X.dtype)
     lam2 = jnp.asarray(lambda2, X.dtype)
 
+    mesh = _resolve_cv_mesh(mesh, k)
+    explicit_chunk = fold_chunk is not None
     if fold_chunk is None:
-        fold_chunk = _auto_fold_chunk(k)
+        fold_chunk = _auto_fold_chunk(k, mesh)
     if k % fold_chunk:
         raise ValueError(f"cross_validate: fold_chunk={fold_chunk} must "
                          f"divide k={k}")
+    chunk_local = fold_chunk
+    if mesh is not None:
+        # the lockstep knob applies PER DEVICE on the sharded path: each
+        # device holds k/mesh.size folds, advanced `chunk_local` at a time.
+        # An explicit chunk the local block cannot honor EXACTLY disables
+        # the mesh (single-device placement) — never silently overridden;
+        # the auto default simply takes the full local width (1 fold per
+        # device => the plain un-vmapped loops).
+        k_local = k // mesh.size
+        if explicit_chunk:
+            if fold_chunk <= k_local and k_local % fold_chunk == 0:
+                chunk_local = fold_chunk
+            else:
+                mesh = None
+        else:
+            chunk_local = k_local
+    config = api.resolve_path_config(config, Xs, ys)
     Xtr, ytr, Xva, yva = cv_folds(Xs, ys, k)
-    mse, n_kept, evals = _enet_cv_scan(Xtr, ytr, Xva, yva, lambda1s, lam2,
-                                       config, fold_chunk)
+    if mesh is not None:
+        Xtr, ytr, Xva, yva = _place_folds(mesh, Xtr, ytr, Xva, yva)
+        mse, n_kept, evals = _enet_cv_scan_sharded(Xtr, ytr, Xva, yva,
+                                                   lambda1s, lam2, config,
+                                                   chunk_local, mesh)
+    else:
+        mse, n_kept, evals = _enet_cv_scan(Xtr, ytr, Xva, yva, lambda1s,
+                                           lam2, config, fold_chunk)
     mean_mse = jnp.mean(mse, axis=1)
     i_min = int(jnp.argmin(mean_mse))
     lambda_min = float(lambda1s[i_min])
@@ -202,13 +301,14 @@ class ElasticNetCV:
     def __init__(self, k: int = 5, n_lambdas: int = 40,
                  eps: Optional[float] = None, lambda2: float = 1.0, *,
                  standardize: bool = True, fit_intercept: bool = True,
-                 config: api.PathConfig = api.PathConfig()):
+                 mesh="auto", config: api.PathConfig = api.PathConfig()):
         self.k = k
         self.n_lambdas = n_lambdas
         self.eps = eps
         self.lambda2 = lambda2
         self.standardize = standardize
         self.fit_intercept = fit_intercept
+        self.mesh = mesh
         self.config = config
 
     def fit(self, X, y):
@@ -216,7 +316,7 @@ class ElasticNetCV:
                              eps=self.eps, lambda2=self.lambda2,
                              standardize=self.standardize,
                              fit_intercept=self.fit_intercept,
-                             config=self.config)
+                             mesh=self.mesh, config=self.config)
         self.coef_ = res.beta
         self.intercept_ = res.intercept
         self.lambda_min_ = res.lambda_min

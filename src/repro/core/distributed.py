@@ -217,6 +217,232 @@ def make_distributed_hessian_matvec(mesh: Mesh, X: jax.Array, y: jax.Array,
     return hess_matvec
 
 
+# ---------------------------------------------------------------------------
+# Data-parallel SVEN (DESIGN.md §9): rows of Zhat sharded over the mesh
+# ---------------------------------------------------------------------------
+#
+# Zhat (n, 2p) is the label-scaled dual data matrix; its rows are the
+# ORIGINAL samples, so row-sharding Zhat == row-sharding X — plain data
+# parallelism. Every solver product then reduces to local O(n_loc p) work
+# plus one small collective:
+#
+#     dual   K = Zhat^T Zhat       one psum of (G, u, s): p^2 + p + 1 floats
+#                                  per SOLVE (kernel caching regime); the
+#                                  projected-Newton solver runs replicated
+#                                  on the assembled (2p, 2p) kernel.
+#     primal Xhat @ w              one psum of (p + 1) floats per product
+#            Xhat^T v              one all-gather of an n-vector
+#            hinge stats           one psum of (p + 2) floats
+#
+# Rows pad with ZEROS to a multiple of the mesh size — a zero sample with a
+# zero response adds nothing to the Elastic Net objective, to any Gram
+# statistic, or to any matvec (the serve/engine.py padding argument), so
+# padded parity is exact, not approximate.
+
+
+def pad_rows(X: jax.Array, y: jax.Array, n_dev: int):
+    """Zero-row pad (X, y) to a row count divisible by `n_dev` (exact)."""
+    rem = (-X.shape[0]) % n_dev
+    if rem == 0:
+        return X, y
+    return jnp.pad(X, ((0, rem), (0, 0))), jnp.pad(y, ((0, rem),))
+
+
+def shard_rows(mesh: Mesh, X: jax.Array, y: jax.Array):
+    """Place (X, y) row-sharded over the flattened mesh (zero-row padded)."""
+    axes = _flat_axes(mesh)
+    n_dev = 1
+    for a in axes:
+        n_dev *= mesh.shape[a]
+    Xp, yp = pad_rows(X, y, n_dev)
+    Xs = jax.device_put(Xp, NamedSharding(mesh, P(axes, None)))
+    ys = jax.device_put(yp, NamedSharding(mesh, P(axes)))
+    return Xs, ys
+
+
+def sharded_gram_stats(mesh: Mesh, X: jax.Array, y: jax.Array, t) -> jax.Array:
+    """K = Zhat^T Zhat from psum-reduced (G, u, s) statistics — the
+    data-parallel twin of `reduction.gram_blocks` (same op order per shard,
+    so a 1-device mesh reproduces the single-device kernel bitwise)."""
+    from repro.core import reduction as red
+
+    axes = _flat_axes(mesh)
+
+    def local(X_loc, y_loc, t_op):
+        G = jax.lax.psum(X_loc.T @ X_loc, axes)
+        u = jax.lax.psum(X_loc.T @ y_loc, axes) / t_op
+        s = jax.lax.psum(y_loc @ y_loc, axes) / (t_op * t_op)
+        return red.gram_from_stats(G, u, s)
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(P(axes, None), P(axes), P()),
+                     out_specs=P(), check_rep=False)(
+                         X, y, jnp.asarray(t, X.dtype))
+
+
+def sharded_hinge_stats(mesh: Mesh, X: jax.Array, y: jax.Array, t,
+                        w: jax.Array, C):
+    """`kernels.ref.hinge_stats_ref` on a row-sharded X: the fused Newton
+    outer-step stats (margin, act, loss, galpha) from ONE psum of p + 2
+    floats — X_loc^T w_loc, y_loc . w_loc and w_loc . w_loc.
+
+    Standalone fused form, parity-tested against the jnp oracle; the
+    primal solver machine (`_sven_sharded_primal`) composes its
+    matvec/rmatvec closures instead, so this op serves stats-driven outer
+    loops and diagnostics rather than the solve hot path."""
+    from repro.kernels.ref import hinge_stats_from_moments
+
+    axes = _flat_axes(mesh)
+    p = X.shape[1]
+    dtype = X.dtype
+
+    def local(X_loc, y_loc, t_op, C_op, w_full):
+        n_loc = X_loc.shape[0]
+        rank = jax.lax.axis_index(axes)
+        w_loc = jax.lax.dynamic_slice_in_dim(w_full, rank * n_loc, n_loc)
+        stats = jax.lax.psum(jnp.concatenate([
+            X_loc.T @ w_loc, (y_loc @ w_loc)[None], (w_loc @ w_loc)[None]]),
+            axes)
+        return hinge_stats_from_moments(stats[:p], stats[p] / t_op,
+                                        stats[p + 1], C_op)
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(P(axes, None), P(axes), P(), P(), P()),
+                     out_specs=(P(), P(), P(), P()), check_rep=False)(
+                         X, y, jnp.asarray(t, dtype), jnp.asarray(C, dtype), w)
+
+
+def _sven_sharded_primal(mesh: Mesh, X, y, t, C, warm_w, config):
+    """Whole primal Newton-CG solve inside ONE shard_map region: w (n,)
+    replicated, X rows sharded; each Xhat product costs one psum(p + 1),
+    each Xhat^T product one all-gather of an n-vector."""
+    from repro.core import reduction as red
+
+    axes = _flat_axes(mesh)
+    n, p = X.shape
+    dtype = X.dtype
+    yhat = jnp.concatenate([jnp.ones((p,), dtype), -jnp.ones((p,), dtype)])
+
+    def local(X_loc, y_loc, t_op, C_op, w0):
+        n_loc = X_loc.shape[0]
+        rank = jax.lax.axis_index(axes)
+
+        def matvec(w):                       # Xhat @ w -> (2p,) replicated
+            w_loc = jax.lax.dynamic_slice_in_dim(w, rank * n_loc, n_loc)
+            ab = jax.lax.psum(jnp.concatenate([X_loc.T @ w_loc,
+                                               (y_loc @ w_loc)[None]]), axes)
+            a, b = ab[:p], ab[p] / t_op
+            return jnp.concatenate([a - b, a + b])
+
+        def rmatvec(v):                      # Xhat^T v -> (n,) replicated
+            vt, vb = v[:p], v[p:]
+            out_loc = (X_loc @ (vt + vb)
+                       + (y_loc / t_op) * (jnp.sum(vb) - jnp.sum(vt)))
+            return jax.lax.all_gather(out_loc, axes, tiled=True)
+
+        res = solve_primal_newton(matvec, rmatvec, yhat, C_op, n,
+                                  tol=config.tol, max_newton=config.max_newton,
+                                  cg_iters=config.cg_iters, w0=w0)
+        alpha = C_op * jnp.maximum(1.0 - yhat * matvec(res.w), 0.0)
+        beta = red.recover_beta(alpha, t_op)
+        return beta, alpha, res.w, res.iters, res.grad_norm
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(P(axes, None), P(axes), P(), P(), P()),
+                     out_specs=(P(), P(), P(), P(), P()), check_rep=False)(
+                         X, y, jnp.asarray(t, dtype), jnp.asarray(C, dtype),
+                         warm_w)
+
+
+@partial(jax.jit, static_argnames=("mesh", "mode", "n_orig", "config"))
+def _sven_sharded_jit(X, y, t, lambda2, warm_alpha, warm_w, *, mesh: Mesh,
+                      mode: str, n_orig: int, config):
+    from repro.core import elastic_net as en
+    from repro.core import reduction as red
+    from repro.core.svm import solve_dual_fista, solve_dual_newton
+    from repro.core.sven import SvenArrays, _bump_trace
+
+    _bump_trace("sven_sharded")
+    n_pad, p = X.shape
+    dtype = X.dtype
+    t = jnp.asarray(t, dtype)
+    lambda2 = jnp.asarray(lambda2, dtype)
+    C = red.svm_C(lambda2, floor=config.lambda2_floor).astype(dtype)
+
+    if mode == "dual":
+        if config.backend == "pallas":
+            from repro.kernels.ops import sharded_shifted_gram
+            K = sharded_shifted_gram(
+                mesh, X.astype(jnp.float32), y.astype(jnp.float32),
+                jnp.asarray(t, jnp.float32),
+                interpret=config.interpret).astype(dtype)
+        else:
+            K = sharded_gram_stats(mesh, X, y, t)
+        solver = (solve_dual_newton if config.solver == "newton"
+                  else solve_dual_fista)
+        res = solver(lambda v: K @ v, 2 * p, C, dtype=dtype, tol=config.tol,
+                     alpha0=warm_alpha)
+        alpha = res.alpha
+        beta = red.recover_beta(alpha, t)
+        # w = Zhat @ alpha on the row-sharded X: global ops, the partitioner
+        # keeps the row dimension sharded and gathers the (n,) result.
+        w = red.SvenOperator(X=X, y=y, t=t).zhat_matvec(alpha)
+        iters, opt = res.iters, res.pg_norm
+    else:
+        beta, alpha, w, iters, opt = _sven_sharded_primal(
+            mesh, X, y, t, C, warm_w, config)
+    # KKT diagnostics on the (padded == original) problem; rows stay sharded
+    # under the partitioner, one all-reduce for the X^T r contraction.
+    kkt = en.kkt_violation(X, y, beta, lambda2)
+    return SvenArrays(beta=beta, alpha=alpha, w=w[:n_orig], iters=iters,
+                      opt_residual=opt, kkt=kkt)
+
+
+def sven_sharded(X: jax.Array, y: jax.Array, t, lambda2, config=None, *,
+                 mesh: Optional[Mesh] = None, warm_alpha=None, warm_w=None):
+    """Data-parallel `sven()`: rows sharded over the mesh, same answers.
+
+    The production multi-device solve path (DESIGN.md §9): X's rows (==
+    Zhat's rows) are zero-padded to the mesh size and sharded over every
+    mesh axis; the dual path assembles the kernel from one psum of its
+    sufficient statistics, the primal path runs the whole Newton-CG machine
+    inside one shard_map region with one psum + one all-gather per product.
+    Parity with single-device `sven()` is exact to solver tolerance
+    (<= 1e-10 tested on 8 forced host devices), and a 1-device mesh
+    reproduces it bitwise.
+
+    `mesh=None` resolves the innermost `dist.mesh_context`, then falls back
+    to `dist.data_mesh()` over all visible devices — on a single-device
+    process that is a 1-device mesh, i.e. the single-device path.
+    """
+    from repro import dist
+    from repro.core.sven import (SvenConfig, SvenSolution, _pick_mode,
+                                 resolve_backend)
+
+    config = SvenConfig() if config is None else config
+    X = jnp.asarray(X)
+    y = jnp.asarray(y, X.dtype)
+    n, p = X.shape
+    if mesh is None:
+        ctx = dist.current_context()
+        mesh = ctx[0] if ctx is not None else dist.data_mesh()
+    mode = _pick_mode(n, p, config)
+    Xs, ys = shard_rows(mesh, X, y)
+    config = resolve_backend(config, Xs, ys)
+    dtype = X.dtype
+    wa = (jnp.zeros((2 * p,), dtype) if warm_alpha is None
+          else jnp.asarray(warm_alpha, dtype))
+    ww = (jnp.zeros((Xs.shape[0],), dtype) if warm_w is None
+          else jnp.pad(jnp.asarray(warm_w, dtype),
+                       ((0, Xs.shape[0] - n),)))
+    arrs = _sven_sharded_jit(Xs, ys, jnp.asarray(t, dtype),
+                             jnp.asarray(lambda2, dtype), wa, ww, mesh=mesh,
+                             mode=mode, n_orig=n, config=config)
+    return SvenSolution(beta=arrs.beta, alpha=arrs.alpha, mode=mode,
+                        iters=arrs.iters, opt_residual=arrs.opt_residual,
+                        kkt=arrs.kkt, w=arrs.w)
+
+
 def sven_primal_distributed(mesh: Mesh, X: jax.Array, y: jax.Array, t: float,
                             lambda2: float, *, tol: float = 1e-8,
                             max_newton: int = 40, cg_iters: int = 200):

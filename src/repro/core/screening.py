@@ -45,9 +45,15 @@ def gap_safe_screen(X: jax.Array, y: jax.Array, beta: jax.Array,
     the rule safe for the serving runtime's repeat-traffic warm starts,
     which screen at exactly such converged points."""
     lam = lambda1 / 2.0
+    # lambda1 = 0 (pure ridge) has no L1 dual ball: nothing is safely
+    # discardable, and every lam division below would produce NaNs that
+    # silently discard EVERYTHING (beta = 0 instead of the ridge solution).
+    # Guard the divisions and force keep-everything on that edge.
+    lam_pos = jnp.asarray(lam > 0)   # jnp: `~` on a Python bool is -2
+    lam_s = jnp.where(lam_pos, lam, 1.0)
     r = y - X @ beta
     corr = X.T @ r - lambda2 * beta                        # (p,)
-    scale = jnp.maximum(lam, jnp.max(jnp.abs(corr)))
+    scale = jnp.maximum(lam_s, jnp.max(jnp.abs(corr)))
 
     # P_half and D(theta) in the augmented-Lasso convention
     res_sq = r @ r + lambda2 * (beta @ beta)               # ||b - A beta||^2
@@ -56,13 +62,14 @@ def gap_safe_screen(X: jax.Array, y: jax.Array, beta: jax.Array,
     btheta = (y @ r) / scale
     theta_sq = res_sq / (scale * scale)
     # D = 1/2||b||^2 - lam^2/2 ||theta - b/lam||^2
-    d_val = 0.5 * b_sq - 0.5 * lam * lam * (
-        theta_sq - 2.0 * btheta / lam + b_sq / (lam * lam))
+    d_val = 0.5 * b_sq - 0.5 * lam_s * lam_s * (
+        theta_sq - 2.0 * btheta / lam_s + b_sq / (lam_s * lam_s))
     gap = jnp.maximum(p_half - d_val, 0.0)
 
-    radius = jnp.sqrt(2.0 * gap) / lam
+    radius = jnp.sqrt(2.0 * gap) / lam_s
     col_norm = jnp.sqrt(jnp.sum(X * X, axis=0) + lambda2)
     keep = (jnp.abs(corr) / scale + radius * col_norm) >= 1.0 - slack
+    keep = jnp.logical_or(keep, jnp.logical_not(lam_pos))
     return ScreenResult(keep=keep, gap=gap, n_kept=jnp.sum(keep))
 
 

@@ -93,6 +93,12 @@ class SvenConfig:
     cache_kernel: str = "auto"    # "auto" | "blocks" | "never" (dual only)
     solver: str = "newton"        # "newton" | "fista" (dual only)
     backend: str = "xla"          # "xla" | "pallas" (TPU-tiled hot ops)
+    # Pallas interpret mode. None = unresolved: the public entry points pin
+    # it from the CONCRETE input arrays' committed devices before tracing
+    # (resolve_backend below) — never from the process default backend at
+    # trace time, which is wrong for arrays placed on a non-default device
+    # and for shard_map-local kernels (DESIGN.md §9.3).
+    interpret: Optional[bool] = None
     tol: float = 1e-8
     max_newton: int = 60
     cg_iters: int = 300
@@ -104,6 +110,24 @@ def _pick_mode(n: int, p: int, cfg: SvenConfig) -> str:
     if cfg.mode != "auto":
         return cfg.mode
     return "primal" if 2 * p > n else "dual"
+
+
+def resolve_backend(config: SvenConfig, *arrays) -> SvenConfig:
+    """Pin the Pallas interpret choice into the (static, jit-keyed) config.
+
+    Resolution happens BEFORE tracing, against the devices the concrete
+    input arrays are committed to (`kernels.ops.resolve_interpret`), so the
+    compiled executable matches where the data actually lives; two
+    placements that need different kernel modes get different jit keys. A
+    no-op for the XLA backend and for configs that already carry an
+    explicit choice.
+    """
+    if config.backend != "pallas" or config.interpret is not None:
+        return config
+    from repro.kernels.ops import resolve_interpret
+
+    return dataclasses.replace(config,
+                               interpret=resolve_interpret(None, *arrays))
 
 
 def _sven_core(
@@ -159,7 +183,7 @@ def _sven_core(
                     X.astype(jnp.float32), y.astype(jnp.float32),
                     jnp.asarray(t, jnp.float32), jnp.asarray(C_traced, jnp.float32),
                     act[:p].astype(jnp.float32), act[p:].astype(jnp.float32),
-                    v.astype(jnp.float32))
+                    v.astype(jnp.float32), interpret=config.interpret)
                 return hv.astype(dtype)
 
         res = solve_primal_newton(
@@ -184,7 +208,8 @@ def _sven_core(
         if config.backend == "pallas":
             from repro.kernels.ops import shifted_gram
             K = shifted_gram(X.astype(jnp.float32), y.astype(jnp.float32),
-                             jnp.asarray(t, jnp.float32)).astype(dtype)
+                             jnp.asarray(t, jnp.float32),
+                             interpret=config.interpret).astype(dtype)
         elif config.matrix_free:
             K = red.gram_blocks(X, y, t)
         else:
@@ -234,6 +259,7 @@ def sven(
     zeroed and their coefficients scattered back as exact zeros, without
     changing the compiled shape.
     """
+    config = resolve_backend(config, X, y)
     arrs = _sven_jit(X, y, jnp.asarray(t, X.dtype), jnp.asarray(lambda2, X.dtype),
                      warm_alpha, warm_w, keep, config)
     mode = _pick_mode(X.shape[0], X.shape[1], config)
@@ -279,6 +305,7 @@ def sven_path(
     semantics; the two are tested equal to 1e-6.
     """
     ts = jnp.asarray(ts, X.dtype)
+    config = resolve_backend(config, X, y)
     return _sven_path_scan(X, y, ts, jnp.asarray(lambda2, X.dtype), config)
 
 

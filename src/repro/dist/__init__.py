@@ -52,6 +52,27 @@ DEFAULT_RULES: dict = {
     "fsdp": None,
 }
 
+def data_mesh(n_devices: Optional[int] = None, axis_name: str = "data"):
+    """A 1-D ("data",) mesh over the process's visible devices.
+
+    The solver layer's default placement: batch-axis sharding of stacked
+    problems (`core/batch.py`, `runtime/scheduler.py`), fold placement for
+    batched CV (`core/cv.py`) and row-sharded data-parallel solves
+    (`core/distributed.py.sven_sharded`) all run on this mesh unless the
+    caller supplies their own. The axis name matches DEFAULT_RULES'
+    "batch" -> "data" mapping, so `constrain`/`resolve_spec` place batch
+    dims across it with no extra rules.
+    """
+    import numpy as np
+
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else n_devices
+    if not 1 <= n <= len(devs):
+        raise ValueError(f"data_mesh: n_devices={n_devices} but "
+                         f"{len(devs)} devices are visible")
+    return Mesh(np.asarray(devs[:n]), (axis_name,))
+
+
 _state = threading.local()
 
 

@@ -15,12 +15,16 @@ via `SvenConfig(backend="pallas")`. Raw kernel bodies (`gram`, `hinge`,
 which owns tiling and padding.
 """
 from repro.kernels import ops, ref
-from repro.kernels.ops import hinge_hessian_matvec, hinge_stats, shifted_gram
+from repro.kernels.ops import (hinge_hessian_matvec, hinge_stats,
+                               resolve_interpret, sharded_shifted_gram,
+                               shifted_gram)
 
 __all__ = [
     "ops",
     "ref",
     "shifted_gram",
+    "sharded_shifted_gram",
     "hinge_hessian_matvec",
     "hinge_stats",
+    "resolve_interpret",
 ]

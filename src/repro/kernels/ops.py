@@ -2,6 +2,15 @@
 interpret-mode fallback on CPU, and a `use_pallas=False` escape hatch that
 routes to the pure-jnp oracle (ref.py) — used for A/B testing and as the
 path taken for shapes where kernel tiling would be wasteful.
+
+Interpret-mode selection is resolved from the OPERANDS, never from the
+process default backend at trace time: an array committed to a non-default
+device (or living on a `repro.dist` mesh) must run the kernel for ITS
+platform. `resolve_interpret` pins the choice before the jitted core is
+entered; traced callers (`core/sven.py`, the bucket executables) thread an
+explicit choice from `SvenConfig.interpret` instead, which `sven()`/
+`sven_batch()`/the penalized front-end resolve against the concrete inputs
+before tracing (DESIGN.md §9.3).
 """
 from __future__ import annotations
 
@@ -16,7 +25,26 @@ from repro.kernels import hinge_stats as _hs
 from repro.kernels import ref as _ref
 
 
-def _on_cpu() -> bool:
+def resolve_interpret(interpret, *arrays) -> bool:
+    """Pin the Pallas interpret-mode choice for a kernel launch.
+
+    An explicit `interpret` always wins. With None, the decision comes from
+    the platform(s) the first CONCRETE array operand is committed to — the
+    devices the kernel will actually run on — not from the process default
+    backend (which is wrong for arrays placed on a non-default device, and
+    meaningless inside a trace). Tracers and numpy inputs carry no device,
+    so the process default backend remains the last-resort fallback only.
+    """
+    if interpret is not None:
+        return bool(interpret)
+    for a in arrays:
+        if isinstance(a, jax.Array) and not isinstance(a, jax.core.Tracer):
+            try:
+                platforms = {d.platform for d in a.devices()}
+            except Exception:  # noqa: BLE001 — abstract/deleted arrays
+                continue
+            if platforms:
+                return platforms == {"cpu"}
     return jax.default_backend() == "cpu"
 
 
@@ -30,7 +58,6 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
     return jnp.pad(x, pads)
 
 
-@partial(jax.jit, static_argnames=("bm", "bn", "bk", "flatten", "use_pallas", "interpret"))
 def shifted_gram(
     X: jax.Array,
     y: jax.Array,
@@ -43,12 +70,34 @@ def shifted_gram(
     use_pallas: bool = True,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """K = Zhat^T Zhat of the SVEN dual, as (2p, 2p) (flatten) or (2,2,p,p)."""
+    """K = Zhat^T Zhat of the SVEN dual, as (2p, 2p) (flatten) or (2,2,p,p).
+
+    `interpret=None` resolves against X's committed devices (see
+    `resolve_interpret`); traced call sites must pass an explicit choice.
+    """
+    return _shifted_gram_jit(X, y, t, bm=bm, bn=bn, bk=bk, flatten=flatten,
+                             use_pallas=use_pallas,
+                             interpret=resolve_interpret(interpret, X, y))
+
+
+@partial(jax.jit, static_argnames=("bm", "bn", "bk", "flatten", "use_pallas", "interpret"))
+def _shifted_gram_jit(
+    X: jax.Array,
+    y: jax.Array,
+    t: jax.Array | float,
+    *,
+    bm: int,
+    bn: int,
+    bk: int,
+    flatten: bool,
+    use_pallas: bool,
+    interpret: bool,
+) -> jax.Array:
     n, p = X.shape
     if not use_pallas:
         Kb = _ref.gram_blocks_ref(X, y, t)
         return _ref.flatten_gram(Kb) if flatten else Kb
-    interp = _on_cpu() if interpret is None else interpret
+    interp = interpret
     Xp = _pad_to(_pad_to(X, 0, bk), 1, max(bm, bn))
     y2d = _pad_to(y[:, None], 0, bk).astype(X.dtype)
     invt = (1.0 / jnp.asarray(t, jnp.float32)).reshape(1, 1)
@@ -57,7 +106,6 @@ def shifted_gram(
     return _ref.flatten_gram(Kb) if flatten else Kb
 
 
-@partial(jax.jit, static_argnames=("bp", "bn", "bk", "use_pallas", "interpret"))
 def hinge_hessian_matvec(
     X: jax.Array,
     y: jax.Array,
@@ -73,10 +121,35 @@ def hinge_hessian_matvec(
     use_pallas: bool = True,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """H v = v + 2C Xhat^T(act . (Xhat v)) via two fused GEMV passes."""
+    """H v = v + 2C Xhat^T(act . (Xhat v)) via two fused GEMV passes.
+
+    `interpret=None` resolves against X's committed devices (see
+    `resolve_interpret`); traced call sites must pass an explicit choice.
+    """
+    return _hinge_hessian_matvec_jit(
+        X, y, t, C, act_top, act_bot, v, bp=bp, bn=bn, bk=bk,
+        use_pallas=use_pallas, interpret=resolve_interpret(interpret, X, v))
+
+
+@partial(jax.jit, static_argnames=("bp", "bn", "bk", "use_pallas", "interpret"))
+def _hinge_hessian_matvec_jit(
+    X: jax.Array,
+    y: jax.Array,
+    t: jax.Array | float,
+    C: jax.Array | float,
+    act_top: jax.Array,
+    act_bot: jax.Array,
+    v: jax.Array,
+    *,
+    bp: int,
+    bn: int,
+    bk: int,
+    use_pallas: bool,
+    interpret: bool,
+) -> jax.Array:
     if not use_pallas:
         return _ref.hessian_matvec_ref(X, y, t, C, act_top, act_bot, v)
-    interp = _on_cpu() if interpret is None else interpret
+    interp = interpret
     n, p = X.shape
     bp_ = min(bp, _next_mult(p))
     bk1 = min(bk, _next_mult(n))
@@ -104,7 +177,6 @@ def hinge_hessian_matvec(
     return hv[:n, 0].astype(v.dtype)
 
 
-@partial(jax.jit, static_argnames=("bp", "bk", "use_pallas", "interpret"))
 def hinge_stats(
     X: jax.Array,
     y: jax.Array,
@@ -117,10 +189,32 @@ def hinge_stats(
     use_pallas: bool = True,
     interpret: bool | None = None,
 ):
-    """Fused Newton outer-step stats: (margin (2p,), act (2p,), loss, galpha)."""
+    """Fused Newton outer-step stats: (margin (2p,), act (2p,), loss, galpha).
+
+    `interpret=None` resolves against X's committed devices (see
+    `resolve_interpret`); traced call sites must pass an explicit choice.
+    """
+    return _hinge_stats_jit(X, y, t, w, C, bp=bp, bk=bk,
+                            use_pallas=use_pallas,
+                            interpret=resolve_interpret(interpret, X, w))
+
+
+@partial(jax.jit, static_argnames=("bp", "bk", "use_pallas", "interpret"))
+def _hinge_stats_jit(
+    X: jax.Array,
+    y: jax.Array,
+    t: jax.Array | float,
+    w: jax.Array,
+    C: jax.Array | float,
+    *,
+    bp: int,
+    bk: int,
+    use_pallas: bool,
+    interpret: bool,
+):
     if not use_pallas:
         return _ref.hinge_stats_ref(X, y, t, w, C)
-    interp = _on_cpu() if interpret is None else interpret
+    interp = interpret
     n, p = X.shape
     bp_ = min(bp, _next_mult(p))
     bk_ = min(bk, _next_mult(n))
@@ -153,3 +247,42 @@ def _next_mult(sz: int, base: int = 128) -> int:
     while m > sz:
         m //= 2
     return max(m, 8)
+
+
+def sharded_shifted_gram(
+    mesh,
+    X: jax.Array,
+    y: jax.Array,
+    t: jax.Array | float,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """K = Zhat^T Zhat with the ROWS of X sharded over `mesh` (DESIGN.md §9).
+
+    Each device runs the block-gram kernel (Pallas, or the jnp oracle with
+    `use_pallas=False`) on its local row shard and ONE psum over the
+    flattened mesh assembles the full (2p, 2p) kernel: the quadrant identity
+    is linear in the per-shard statistics (G, u, s), so partial block-grams
+    sum exactly. Interpret mode is pinned OUTSIDE the shard_map region —
+    inside it the process default backend is unrelated to the kernel's
+    actual placement, which is precisely why trace-time sniffing was a bug.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    axes = tuple(mesh.axis_names)
+    interp = resolve_interpret(interpret, X, y)
+
+    def local(X_loc, y_loc, t_op):
+        Kb = _shifted_gram_jit(X_loc, y_loc, t_op, bm=bm, bn=bn, bk=bk,
+                               flatten=True, use_pallas=use_pallas,
+                               interpret=interp)
+        return jax.lax.psum(Kb, axes)
+
+    fn = shard_map(local, mesh=mesh, in_specs=(P(axes, None), P(axes), P()),
+                   out_specs=P(), check_rep=False)
+    return fn(X, y, jnp.asarray(t, X.dtype))

@@ -66,9 +66,24 @@ class WarmEntry(NamedTuple):
 
 
 def _log_distance(a: float, b: float) -> float:
-    """|log(a/b)| with a floor so lambda2 = 0 (Lasso) still compares."""
-    eps = 1e-12
-    return abs(math.log((abs(a) + eps) / (abs(b) + eps)))
+    """|log(a/b)| on the positive lambda axis, with the zero edge exact.
+
+    lambda = 0 is a FORM boundary, not a small lambda: lambda1 = 0 is pure
+    ridge and lambda2 = 0 is the Lasso. It gets its own point on the key
+    axis — distance 0 to another exact zero (lasso-only / ridge-only repeat
+    traffic warm-starts itself) and +inf to any positive lambda (a
+    regularized entry never masquerades as the edge form, and log(0) is
+    never evaluated). The previous eps-floored `log((|a|+eps)/(|b|+eps))`
+    broke both ways at the edges: genuinely tiny lambdas collapsed onto the
+    floor (1e-13 vs 1e-14 scored as "adjacent"), and an entry within eps of
+    zero scored finite distance to the exact edge.
+    """
+    a, b = abs(a), abs(b)
+    if a == 0.0 and b == 0.0:
+        return 0.0
+    if a == 0.0 or b == 0.0:
+        return math.inf
+    return abs(math.log(a / b))
 
 
 class SolutionCache:

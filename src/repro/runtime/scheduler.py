@@ -34,6 +34,7 @@ suggests.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import heapq
 import math
@@ -44,6 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import dist
 from repro.core.api import EnetCarry, PathConfig, enet_batch
 from repro.core.batch import sven_batch
 from repro.core.sven import SvenConfig
@@ -165,7 +167,7 @@ class ContinuousScheduler:
                  max_batch: int = 64, min_n: int = 16, min_p: int = 8,
                  max_wait: Optional[float] = 0.01,
                  cache="default", fixed_batch: bool = False,
-                 auto_launch_full: bool = True,
+                 auto_launch_full: bool = True, mesh="auto",
                  clock=time.perf_counter, dtype=jnp.float64):
         if max_batch < 1 or min_n < 1 or min_p < 1:
             raise ValueError(f"ContinuousScheduler: max_batch/min_n/min_p "
@@ -180,6 +182,12 @@ class ContinuousScheduler:
         self.min_p = min_p
         self.max_wait = max_wait
         self.cache = SolutionCache() if cache == "default" else cache
+        # mesh="auto": place bucket executables' batch axis across the
+        # process's devices when there is more than one; None = single
+        # device, exactly the seed behavior. An explicit Mesh pins placement.
+        if mesh == "auto":
+            mesh = dist.data_mesh() if jax.device_count() > 1 else None
+        self.mesh = mesh
         self.fixed_batch = fixed_batch
         self.auto_launch_full = auto_launch_full
         self.clock = clock
@@ -217,8 +225,10 @@ class ContinuousScheduler:
         if t is not None and not (t > 0 and lambda2 >= 0):
             raise ValueError(f"submit: need t > 0, lambda2 >= 0 "
                              f"(t={t}, lambda2={lambda2})")
-        if lambda1 is not None and not (lambda1 > 0 and lambda2 >= 0):
-            raise ValueError(f"submit: need lambda1 > 0, lambda2 >= 0 "
+        # lambda1 = 0 (pure ridge) and lambda2 = 0 (Lasso) are both served:
+        # the cache keys these edges exactly (runtime/cache.py).
+        if lambda1 is not None and not (lambda1 >= 0 and lambda2 >= 0):
+            raise ValueError(f"submit: need lambda1 >= 0, lambda2 >= 0 "
                              f"(lambda1={lambda1}, lambda2={lambda2})")
         now = self.clock()
         if deadline is None:
@@ -409,7 +419,14 @@ class ContinuousScheduler:
 
     def _dispatch(self, key: tuple, reqs: List[EnRequest]) -> _InFlight:
         """Pad, stack, warm-start and launch one bucket — NO blocking: the
-        returned arrays are futures under JAX async dispatch."""
+        returned arrays are futures under JAX async dispatch.
+
+        Under a configured mesh the launch runs inside `dist.mesh_context`,
+        so `sven_batch`/`enet_batch` place every stacked operand with the
+        rule table's "batch" axis — the bucket's problems fan out across
+        the data-parallel mesh (a batch the mesh size does not divide
+        resolves to replicated placement: graceful single-device fallback,
+        see dist.resolve_spec)."""
         bn, bp, form = key
         b_real = len(reqs)
         b_pad = (self.max_batch if self.fixed_batch
@@ -420,20 +437,24 @@ class ContinuousScheduler:
         l2b = np.asarray([r.lambda2 for r in reqs] + fill, self.dtype)
         wa, ww, wb, wt, wnu, hot = self._warm_arrays(reqs, bn, bp, b_pad, form)
 
-        if form == PENALIZED:
-            warm = EnetCarry(beta=wb, alpha=wa, w=ww, t=wt, nu=wnu)
-            pts, carry = enet_batch(Xb, yb, lamb, l2b, self.path_config,
-                                    warm=warm, has_warm=hot, return_carry=True)
-            inf = _InFlight(key=key, reqs=tuple(reqs), beta=pts.beta,
-                            iters=pts.sven_iters, kkt=pts.kkt,
-                            alpha=carry.alpha, w=carry.w, t_out=pts.t,
-                            nu_out=pts.nu)
-        else:
-            sol = sven_batch(Xb, yb, lamb, l2b, self.config,
-                             warm_alpha=wa, warm_w=ww)
-            inf = _InFlight(key=key, reqs=tuple(reqs), beta=sol.beta,
-                            iters=sol.iters, kkt=sol.kkt, alpha=sol.alpha,
-                            w=sol.w, t_out=lamb, nu_out=jnp.zeros_like(lamb))
+        ctx = (dist.mesh_context(self.mesh) if self.mesh is not None
+               else contextlib.nullcontext())
+        with ctx:
+            if form == PENALIZED:
+                warm = EnetCarry(beta=wb, alpha=wa, w=ww, t=wt, nu=wnu)
+                pts, carry = enet_batch(Xb, yb, lamb, l2b, self.path_config,
+                                        warm=warm, has_warm=hot,
+                                        return_carry=True)
+                inf = _InFlight(key=key, reqs=tuple(reqs), beta=pts.beta,
+                                iters=pts.sven_iters, kkt=pts.kkt,
+                                alpha=carry.alpha, w=carry.w, t_out=pts.t,
+                                nu_out=pts.nu)
+            else:
+                sol = sven_batch(Xb, yb, lamb, l2b, self.config,
+                                 warm_alpha=wa, warm_w=ww)
+                inf = _InFlight(key=key, reqs=tuple(reqs), beta=sol.beta,
+                                iters=sol.iters, kkt=sol.kkt, alpha=sol.alpha,
+                                w=sol.w, t_out=lamb, nu_out=jnp.zeros_like(lamb))
         self.stats.padded_slots += b_pad - b_real
         self._seen_shapes.add((bn, bp, b_pad, form))
         self.stats.bucket_shapes = len(self._seen_shapes)

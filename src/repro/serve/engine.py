@@ -112,7 +112,7 @@ class ElasticNetEngine:
                  path_config: PathConfig = PathConfig(),
                  max_batch: int = 64, min_n: int = 16, min_p: int = 8,
                  cache: Optional[SolutionCache] = "default",
-                 dtype=jnp.float64):
+                 mesh="auto", dtype=jnp.float64):
         if max_batch < 1 or min_n < 1 or min_p < 1:
             raise ValueError(f"ElasticNetEngine: max_batch/min_n/min_p must be "
                              f">= 1 (got {max_batch}/{min_n}/{min_p})")
@@ -124,11 +124,13 @@ class ElasticNetEngine:
         self.dtype = dtype
         # drain-on-demand: no deadlines AND no bucket-full auto-launch, so
         # nothing runs before an explicit drain/solve — which also keeps
-        # drain_reference() a genuinely synchronous, untouched-queue oracle
+        # drain_reference() a genuinely synchronous, untouched-queue oracle.
+        # `mesh` passes straight through to the scheduler ("auto" = place
+        # bucket batches across the devices when more than one is visible).
         self._scheduler = ContinuousScheduler(
             config, path_config=path_config, max_batch=max_batch,
             min_n=min_n, min_p=min_p, max_wait=None, cache=cache,
-            auto_launch_full=False, dtype=dtype)
+            auto_launch_full=False, mesh=mesh, dtype=dtype)
 
     @property
     def scheduler(self) -> ContinuousScheduler:

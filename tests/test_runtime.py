@@ -138,8 +138,10 @@ def test_submit_validation():
         sched.submit(X, y)
     with pytest.raises(ValueError, match="bad shapes"):
         sched.submit(X, y[:-1], t=t)
-    with pytest.raises(ValueError, match="lambda1 > 0"):
+    with pytest.raises(ValueError, match="lambda1 >= 0"):
         sched.submit(X, y, lambda1=-1.0)
+    with pytest.raises(ValueError, match="lambda2 >= 0"):
+        sched.submit(X, y, lambda1=1.0, lambda2=-1.0)
 
 
 def test_result_blocks_for_one_request_only():
