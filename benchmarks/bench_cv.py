@@ -40,7 +40,9 @@ def run(k: int = 5, n_lambdas: int = 16) -> dict:
     # as ONE executable vs the glmnet-shaped per-fold dispatch loop (both
     # jit-warm, same splits/grid; selection + refit excluded from both)
     cfg = PathConfig()
-    chunk = _auto_fold_chunk(k)
+    # resolved placement = single device here (the bench times the
+    # un-sharded scan); _auto_fold_chunk requires it spelled out
+    chunk = _auto_fold_chunk(k, None)
     grid = lambda_grid(X, y, n_lambdas=n_lambdas)
     Xtr, ytr, Xva, yva = cv_folds(X, y, k)
     def batched_scan():

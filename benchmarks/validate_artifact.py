@@ -7,9 +7,11 @@ gated on per-entry-point trace DELTAS between warmup and the measured
 passes), exactness vs the sequential / coordinate-descent oracles, batched
 CV at least matching the sequential loop, the continuous-batching runtime
 sustaining >= 2x the synchronous drain_reference throughput with warm-start
-cache hits under the adjacent-lambda load, and the sharded solve path at
+cache hits under the adjacent-lambda load, the sharded solve path at
 <= 1e-10 parity with (and speedup-or-parity against) the single-device
-path on the 8-device host mesh.
+path on the 8-device host mesh, and the cost-model-routed solve never
+landing meaningfully below single-device speed (`routed_ok` — the gate
+that keeps the always-shard 0.10x lone-solve regression from recurring).
 
     python benchmarks/validate_artifact.py [BENCH_path.json]
 """
@@ -45,9 +47,11 @@ REQUIRED_KEYS = {
     },
     "dist_solve": {
         "devices", "n", "p", "grid_B", "solve_single_seconds",
-        "solve_sharded_seconds", "solve_speedup", "batch_single_seconds",
-        "batch_sharded_seconds", "batch_speedup", "max_dev_sharded_solve",
-        "max_dev_sharded_batch", "speedup_or_parity",
+        "solve_sharded_seconds", "solve_speedup", "solve_routed_seconds",
+        "routed_speedup", "routed_path", "max_dev_routed",
+        "batch_single_seconds", "batch_sharded_seconds", "batch_speedup",
+        "max_dev_sharded_solve", "max_dev_sharded_batch", "speedup_or_parity",
+        "routed_ok",
     },
 }
 
@@ -106,6 +110,13 @@ def validate(artifact: dict) -> list:
     check("dist_solve", dist_solve.get("speedup_or_parity") is True,
           "sharded path is neither faster than nor exactly at parity with "
           "the single-device path")
+    check("dist_solve", dist_solve.get("max_dev_routed", 1.0) <= 1e-10,
+          "routed sven diverged from the single-device solve")
+    check("dist_solve", dist_solve.get("routed_ok") is True,
+          "routed single-solve regression: the cost-model router picked a "
+          "path slower than single-device (the PR 5 always-shard 0.10x "
+          "class) — routed_speedup must be >= 1.0, or >= 0.8 with the "
+          "router on the bit-identical single path")
     return errors
 
 
@@ -120,7 +131,9 @@ def main() -> None:
     ds = artifact.get("dist_solve")
     dist_note = (f", dist batch {ds['batch_speedup']:.2f}x on "
                  f"{ds['devices']} devices "
-                 f"(max dev {ds['max_dev_sharded_solve']:.1e})" if ds else "")
+                 f"(max dev {ds['max_dev_sharded_solve']:.1e}, "
+                 f"routed->{ds['routed_path']} "
+                 f"{ds['routed_speedup']:.2f}x)" if ds else "")
     print(f"[validate_artifact] {fname} OK: "
           f"path scan {artifact['path']['scan_vs_loop_speedup']:.2f}x, "
           f"cv batched {artifact['cv']['cv_batched_vs_sequential_speedup']:.2f}x, "

@@ -32,6 +32,15 @@ from repro.core.distributed import (
     sharded_hinge_stats,
     sven_sharded,
 )
+from repro.core.routing import (
+    Calibration,
+    RouteDecision,
+    calibrate,
+    clear_calibration,
+    route_batch,
+    route_solve,
+    sven_routed,
+)
 from repro.core.screening import gap_safe_screen, sven_with_screening
 from repro.core.api import (
     ElasticNet,
@@ -80,6 +89,14 @@ __all__ = [
     "sven_sharded",
     "sharded_gram_stats",
     "sharded_hinge_stats",
+    # adaptive layout routing (core/routing.py, DESIGN.md §9.5)
+    "sven_routed",
+    "route_solve",
+    "route_batch",
+    "calibrate",
+    "clear_calibration",
+    "Calibration",
+    "RouteDecision",
 
     # glmnet-parity penalized front-end (core/api.py, core/cv.py)
     "ElasticNet",

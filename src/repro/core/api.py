@@ -385,14 +385,17 @@ def enet_batch(X, y, lambda1s, lambda2s,
                config: PathConfig = PathConfig(), *,
                warm: Optional[EnetCarry] = None,
                has_warm: Optional[jax.Array] = None,
-               return_carry: bool = False):
+               return_carry: bool = False,
+               route: str = "auto"):
     """Stacked penalized solves in one vmapped executable (serving layer).
 
     Batch axes by rank, as in `core.batch.sven_batch`: X (B, n, p) or (n, p)
     shared; y (B, n) or (n,); lambda1/lambda2 (B,) or scalar. Every field of
     the returned EnetPoint carries a leading (B,) axis. Under an active
     `repro.dist.mesh_context` the stacked operands take the rule table's
-    "batch" axis placement, exactly as `sven_batch` does.
+    "batch" axis placement when the `core.routing` cost model prefers the
+    fan-out for this shape, exactly as `sven_batch` does; `route=` pins the
+    layout ("batch" / "single").
 
     `warm` is an optional stacked EnetCarry (every field with a leading (B,)
     axis) and `has_warm` a (B,) bool selecting, per problem, the warm state
@@ -427,15 +430,19 @@ def enet_batch(X, y, lambda1s, lambda2s,
         sizes.add(has_warm.shape[0])
     if len(sizes) != 1:
         raise ValueError(f"enet_batch: inconsistent batch sizes {sorted(sizes)}")
-    X, y, lambda1s, lambda2s = (
-        _maybe_shard_batch(op, ax == 0)
-        for op, ax in zip((X, y, lambda1s, lambda2s), axes[:4]))
-    if warm is not None:
-        warm = EnetCarry(*(_maybe_shard_batch(jnp.asarray(f), True)
-                           for f in warm))
-        has_warm = _maybe_shard_batch(has_warm, True)
+    # route BEFORE placing (see sven_batch): the penalized lane runs the
+    # whole multiplier root-find, priced via form="penalized".
+    mesh = batch_mesh(next(iter(sizes)), X.shape[-2], X.shape[-1],
+                      form="penalized", route=route)
+    if mesh is not None:
+        X, y, lambda1s, lambda2s = (
+            _maybe_shard_batch(op, ax == 0)
+            for op, ax in zip((X, y, lambda1s, lambda2s), axes[:4]))
+        if warm is not None:
+            warm = EnetCarry(*(_maybe_shard_batch(jnp.asarray(f), True)
+                               for f in warm))
+            has_warm = _maybe_shard_batch(has_warm, True)
     config = resolve_path_config(config, X, y)
-    mesh = batch_mesh(next(iter(sizes)))
     if mesh is not None:
         carry, points = _enet_batch_sharded_jit(X, y, lambda1s, lambda2s,
                                                 warm, has_warm, config, axes,

@@ -22,7 +22,7 @@ executable.
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -108,17 +108,33 @@ def _sven_batch_sharded_jit(X, y, t, lambda2, keep, warm_alpha, warm_w,
                            (X, y, t, lambda2, keep, warm_alpha, warm_w))
 
 
-def batch_mesh(batch_size: int):
-    """The mesh the innermost `dist.mesh_context` provides for batch-axis
-    fan-out, or None when there is no context, the mesh is a single device,
-    or it does not divide `batch_size` (graceful single-device fallback)."""
+def batch_mesh(batch_size: int, n: Optional[int] = None,
+               p: Optional[int] = None, *, form: str = "constrained",
+               route: str = "auto"):
+    """The mesh a stacked launch should fan its batch axis over, or None.
+
+    Structural vetoes first (no context, 1-device mesh, mesh does not
+    divide `batch_size` -> None: graceful single-device fallback), then the
+    COST MODEL: with the problem shape (`n`, `p`) given, `core.routing`
+    prices the fan-out against a single-device vmap on the calibrated mesh
+    and returns None when single wins — an active mesh_context is an
+    OFFER of devices, not an obligation to use them (the PR 6 regression
+    fix). `route="batch"` pins the fan-out, `route="single"` pins one
+    device; without a shape the offer is taken as-is (legacy behavior,
+    the caller knows no better and neither do we).
+    """
     ctx = dist.current_context()
-    if ctx is None:
+    if ctx is None or route == "single":
         return None
     mesh = ctx[0]
     if mesh.size <= 1 or batch_size % mesh.size != 0:
         return None
-    return mesh
+    if route == "batch" or n is None or p is None:
+        return mesh
+    from repro.core import routing
+    decision = routing.route_batch(n, p, batch_size, mesh, form=form,
+                                   route=route)
+    return mesh if decision.path == "batch" else None
 
 
 def _maybe_shard_batch(arr: jax.Array, batched: bool, ctx=None) -> jax.Array:
@@ -148,6 +164,7 @@ def sven_batch(
     keep: jax.Array | None = None,
     warm_alpha: jax.Array | None = None,
     warm_w: jax.Array | None = None,
+    route: str = "auto",
 ) -> SvenBatchSolution:
     """Solve a stack of Elastic Net problems in one vmapped executable.
 
@@ -161,6 +178,11 @@ def sven_batch(
     stack — the serving runtime's cache hands back neighbouring solutions
     through these (zero rows are exactly a cold start, so a mixed
     hit/miss batch stays a single executable).
+
+    Under an active `dist.mesh_context` the batch axis fans out over the
+    mesh only when the `core.routing` cost model says the mesh wins for
+    this shape (see `batch_mesh`); `route="batch"`/`route="single"` pins
+    the layout. Results are identical either way (tested to <= 1e-10).
     """
     X = jnp.asarray(X)
     dtype = X.dtype
@@ -189,11 +211,17 @@ def sven_batch(
     if len(sizes) != 1:
         raise ValueError(f"sven_batch: inconsistent batch sizes {sorted(sizes)}")
 
-    X, y, t, lambda2, keep, warm_alpha, warm_w = (
-        _maybe_shard_batch(op, ax == 0) if op is not None else None
-        for op, ax in zip(operands, axes))
+    # route BEFORE placing: once operands are batch-sharded, a vmapped
+    # executable would run under the partitioner with a per-iteration
+    # all-reduce on every while_loop — placement must follow the routing
+    # decision, never precede it.
+    pn, pp = X.shape[-2], X.shape[-1]
+    mesh = batch_mesh(next(iter(sizes)), pn, pp, route=route)
+    if mesh is not None:
+        X, y, t, lambda2, keep, warm_alpha, warm_w = (
+            _maybe_shard_batch(op, ax == 0) if op is not None else None
+            for op, ax in zip(operands, axes))
     config = resolve_backend(config, X, y)
-    mesh = batch_mesh(next(iter(sizes)))
     if mesh is not None:
         arrs = _sven_batch_sharded_jit(X, y, t, lambda2, keep, warm_alpha,
                                        warm_w, config, axes, mesh)

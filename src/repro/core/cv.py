@@ -30,7 +30,7 @@ from repro.core.batch import cv_folds
 from repro.core.sven import _bump_trace
 
 
-def _auto_fold_chunk(k: int, mesh=None) -> int:
+def _auto_fold_chunk(k: int, mesh) -> int:
     """Right-size the scan-of-vmap: how many folds advance in vmap lockstep.
 
     A vmapped `while_loop` costs the MAX trip count across lanes at every
@@ -47,6 +47,12 @@ def _auto_fold_chunk(k: int, mesh=None) -> int:
     mere existence of extra devices the folds don't live on (the old
     heuristic) buys nothing. Non-CPU backends keep the full-width vmap
     even on one device (batch parallelism in the hardware).
+
+    `mesh` is REQUIRED and must be the RESOLVED placement (the mesh the
+    folds actually shard over, or None for single-device) — an optional
+    default here once let a caller inside an outer `mesh_context` with a
+    single-device resolution fall back to process-global state and pick the
+    wrong lockstep width. Every call path resolves first, then asks.
     """
     if mesh is not None and mesh.size > 1:
         return k
@@ -55,11 +61,20 @@ def _auto_fold_chunk(k: int, mesh=None) -> int:
     return 1
 
 
-def _resolve_cv_mesh(mesh, k: int):
+def _resolve_cv_mesh(mesh, k: int, n_tr: Optional[int] = None,
+                     p: Optional[int] = None, points: int = 1):
     """mesh="auto" -> the innermost dist context, else a device-spanning
     data mesh, else None; any mesh whose size does not divide k falls back
-    to None (replicated folds would just pay collective overhead)."""
-    if mesh == "auto":
+    to None (replicated folds would just pay collective overhead).
+
+    An auto-resolved mesh is an OFFER, so with the fold-problem shape
+    (`n_tr`, `p`, `points` grid points per lane) given it is also priced by
+    the `core.routing` cost model and declined when a single device would
+    finish the CV surface sooner. An EXPLICIT mesh pins the placement —
+    the caller said where the folds live, routing does not second-guess it.
+    """
+    auto = mesh == "auto"
+    if auto:
         ctx = dist.current_context()
         if ctx is not None:
             mesh = ctx[0]
@@ -69,6 +84,12 @@ def _resolve_cv_mesh(mesh, k: int):
             mesh = None
     if mesh is not None and (mesh.size <= 1 or k % mesh.size != 0):
         return None
+    if auto and mesh is not None and n_tr is not None and p is not None:
+        from repro.core import routing
+        decision = routing.route_batch(n_tr, p, k, mesh, form="penalized",
+                                       points=points)
+        if decision.path != "batch":
+            return None
     return mesh
 
 
@@ -218,7 +239,9 @@ def cross_validate(X, y, *, k: int = 5, lambda1s=None, n_lambdas: int = 40,
     lambda1s = jnp.asarray(lambda1s, X.dtype)
     lam2 = jnp.asarray(lambda2, X.dtype)
 
-    mesh = _resolve_cv_mesh(mesh, k)
+    n_tr = (Xs.shape[0] // k) * (k - 1)          # rows per training fold
+    mesh = _resolve_cv_mesh(mesh, k, n_tr, Xs.shape[1],
+                            points=int(lambda1s.shape[0]))
     explicit_chunk = fold_chunk is not None
     if fold_chunk is None:
         fold_chunk = _auto_fold_chunk(k, mesh)

@@ -260,24 +260,50 @@ def shard_rows(mesh: Mesh, X: jax.Array, y: jax.Array):
     return Xs, ys
 
 
-def sharded_gram_stats(mesh: Mesh, X: jax.Array, y: jax.Array, t) -> jax.Array:
-    """K = Zhat^T Zhat from psum-reduced (G, u, s) statistics — the
-    data-parallel twin of `reduction.gram_blocks` (same op order per shard,
-    so a 1-device mesh reproduces the single-device kernel bitwise)."""
-    from repro.core import reduction as red
+@partial(jax.jit, static_argnames=("mesh",))
+def sharded_stats(X, y, t, *, mesh: Mesh):
+    """The ONE collective of the sharded dual solve, as its own executable:
+    psum-reduced sufficient statistics (G = X^T X, u = X^T y / t,
+    s = y^T y / t^2) of a row-sharded (X, y).
 
+    Launched separately from the solve program ON PURPOSE: under JAX async
+    dispatch the returned arrays are futures, so the device runs the
+    all-reduce while the host traces/launches the (much larger) replicated
+    Newton program that consumes them — the stats reduction overlaps the
+    solver setup instead of serializing in front of it. Same op order per
+    shard as `reduction.gram_blocks`'s inputs, so a 1-device mesh
+    reproduces the single-device statistics bitwise.
+    """
+    from repro.core.sven import _bump_trace
+
+    _bump_trace("sven_sharded_stats")
     axes = _flat_axes(mesh)
 
     def local(X_loc, y_loc, t_op):
         G = jax.lax.psum(X_loc.T @ X_loc, axes)
         u = jax.lax.psum(X_loc.T @ y_loc, axes) / t_op
         s = jax.lax.psum(y_loc @ y_loc, axes) / (t_op * t_op)
-        return red.gram_from_stats(G, u, s)
+        return G, u, s
 
     return shard_map(local, mesh=mesh,
                      in_specs=(P(axes, None), P(axes), P()),
-                     out_specs=P(), check_rep=False)(
+                     out_specs=(P(), P(), P()), check_rep=False)(
                          X, y, jnp.asarray(t, X.dtype))
+
+
+def sharded_gram_stats(mesh: Mesh, X: jax.Array, y: jax.Array, t) -> jax.Array:
+    """K = Zhat^T Zhat from psum-reduced (G, u, s) statistics — the
+    data-parallel twin of `reduction.gram_blocks` (same op order per shard,
+    so a 1-device mesh reproduces the single-device kernel bitwise).
+
+    Composition of the async `sharded_stats` launch and the replicated
+    4-block assembly; callers that want the overlap harvest the stats
+    futures inside their own program instead (`_sven_sharded_dual_jit`).
+    """
+    from repro.core import reduction as red
+
+    G, u, s = sharded_stats(X, y, t, mesh=mesh)
+    return red.gram_from_stats(G, u, s)
 
 
 def sharded_hinge_stats(mesh: Mesh, X: jax.Array, y: jax.Array, t,
@@ -354,43 +380,55 @@ def _sven_sharded_primal(mesh: Mesh, X, y, t, C, warm_w, config):
                          warm_w)
 
 
-@partial(jax.jit, static_argnames=("mesh", "mode", "n_orig", "config"))
-def _sven_sharded_jit(X, y, t, lambda2, warm_alpha, warm_w, *, mesh: Mesh,
-                      mode: str, n_orig: int, config):
+@partial(jax.jit, static_argnames=("n_orig", "config"))
+def _sven_sharded_dual_jit(stats, K, X, y, t, lambda2, warm_alpha, *,
+                           n_orig: int, config):
+    """Replicated dual solve consuming the async stats/K launch.
+
+    Exactly one of `stats` (the (G, u, s) futures from `sharded_stats`) and
+    `K` (the Pallas `sharded_shifted_gram` future) is non-None — harvested
+    at first use, so by the time the device reaches the kernel assembly the
+    overlapped reduction has usually already landed. Everything here is
+    global ops: the partitioner keeps X's rows sharded for the w-recovery
+    and KKT contractions (one all-reduce each), the Newton solve itself is
+    replicated — no shard_map, hence no static mesh in the jit key.
+    """
     from repro.core import elastic_net as en
     from repro.core import reduction as red
     from repro.core.svm import solve_dual_fista, solve_dual_newton
     from repro.core.sven import SvenArrays, _bump_trace
 
     _bump_trace("sven_sharded")
-    n_pad, p = X.shape
+    p = X.shape[1]
     dtype = X.dtype
-    t = jnp.asarray(t, dtype)
-    lambda2 = jnp.asarray(lambda2, dtype)
     C = red.svm_C(lambda2, floor=config.lambda2_floor).astype(dtype)
+    if K is None:
+        K = red.gram_from_stats(*stats)
+    solver = (solve_dual_newton if config.solver == "newton"
+              else solve_dual_fista)
+    res = solver(lambda v: K @ v, 2 * p, C, dtype=dtype, tol=config.tol,
+                 alpha0=warm_alpha)
+    beta = red.recover_beta(res.alpha, t)
+    # w = Zhat @ alpha on the row-sharded X: global ops, the partitioner
+    # keeps the row dimension sharded and gathers the (n,) result.
+    w = red.SvenOperator(X=X, y=y, t=t).zhat_matvec(res.alpha)
+    kkt = en.kkt_violation(X, y, beta, lambda2)
+    return SvenArrays(beta=beta, alpha=res.alpha, w=w[:n_orig],
+                      iters=res.iters, opt_residual=res.pg_norm, kkt=kkt)
 
-    if mode == "dual":
-        if config.backend == "pallas":
-            from repro.kernels.ops import sharded_shifted_gram
-            K = sharded_shifted_gram(
-                mesh, X.astype(jnp.float32), y.astype(jnp.float32),
-                jnp.asarray(t, jnp.float32),
-                interpret=config.interpret).astype(dtype)
-        else:
-            K = sharded_gram_stats(mesh, X, y, t)
-        solver = (solve_dual_newton if config.solver == "newton"
-                  else solve_dual_fista)
-        res = solver(lambda v: K @ v, 2 * p, C, dtype=dtype, tol=config.tol,
-                     alpha0=warm_alpha)
-        alpha = res.alpha
-        beta = red.recover_beta(alpha, t)
-        # w = Zhat @ alpha on the row-sharded X: global ops, the partitioner
-        # keeps the row dimension sharded and gathers the (n,) result.
-        w = red.SvenOperator(X=X, y=y, t=t).zhat_matvec(alpha)
-        iters, opt = res.iters, res.pg_norm
-    else:
-        beta, alpha, w, iters, opt = _sven_sharded_primal(
-            mesh, X, y, t, C, warm_w, config)
+
+@partial(jax.jit, static_argnames=("mesh", "n_orig", "config"))
+def _sven_sharded_primal_jit(X, y, t, lambda2, warm_w, *, mesh: Mesh,
+                             n_orig: int, config):
+    from repro.core import elastic_net as en
+    from repro.core import reduction as red
+    from repro.core.sven import SvenArrays, _bump_trace
+
+    _bump_trace("sven_sharded")
+    dtype = X.dtype
+    C = red.svm_C(lambda2, floor=config.lambda2_floor).astype(dtype)
+    beta, alpha, w, iters, opt = _sven_sharded_primal(
+        mesh, X, y, t, C, warm_w, config)
     # KKT diagnostics on the (padded == original) problem; rows stay sharded
     # under the partitioner, one all-reduce for the X^T r contraction.
     kkt = en.kkt_violation(X, y, beta, lambda2)
@@ -414,6 +452,10 @@ def sven_sharded(X: jax.Array, y: jax.Array, t, lambda2, config=None, *,
     `mesh=None` resolves the innermost `dist.mesh_context`, then falls back
     to `dist.data_mesh()` over all visible devices — on a single-device
     process that is a 1-device mesh, i.e. the single-device path.
+
+    This is the PINNED sharded layout: it always runs row-sharded on the
+    resolved mesh. `core.routing.sven_routed` is the entry point that
+    consults the cost model first and only comes here when sharding wins.
     """
     from repro import dist
     from repro.core.sven import (SvenConfig, SvenSolution, _pick_mode,
@@ -430,14 +472,32 @@ def sven_sharded(X: jax.Array, y: jax.Array, t, lambda2, config=None, *,
     Xs, ys = shard_rows(mesh, X, y)
     config = resolve_backend(config, Xs, ys)
     dtype = X.dtype
-    wa = (jnp.zeros((2 * p,), dtype) if warm_alpha is None
-          else jnp.asarray(warm_alpha, dtype))
-    ww = (jnp.zeros((Xs.shape[0],), dtype) if warm_w is None
-          else jnp.pad(jnp.asarray(warm_w, dtype),
-                       ((0, Xs.shape[0] - n),)))
-    arrs = _sven_sharded_jit(Xs, ys, jnp.asarray(t, dtype),
-                             jnp.asarray(lambda2, dtype), wa, ww, mesh=mesh,
-                             mode=mode, n_orig=n, config=config)
+    t_op = jnp.asarray(t, dtype)
+    l2_op = jnp.asarray(lambda2, dtype)
+    if mode == "dual":
+        # Launch the one-psum stats reduction (or the Pallas Gram kernel)
+        # as its OWN async program, then hand its output futures to the
+        # replicated solve program — the device reduces while the host
+        # traces/dispatches the Newton setup (collective/compute overlap).
+        stats = K = None
+        if config.backend == "pallas":
+            from repro.kernels.ops import sharded_shifted_gram
+            K = sharded_shifted_gram(
+                mesh, Xs.astype(jnp.float32), ys.astype(jnp.float32),
+                jnp.asarray(t, jnp.float32),
+                interpret=config.interpret).astype(dtype)
+        else:
+            stats = sharded_stats(Xs, ys, t_op, mesh=mesh)
+        wa = (jnp.zeros((2 * p,), dtype) if warm_alpha is None
+              else jnp.asarray(warm_alpha, dtype))
+        arrs = _sven_sharded_dual_jit(stats, K, Xs, ys, t_op, l2_op, wa,
+                                      n_orig=n, config=config)
+    else:
+        ww = (jnp.zeros((Xs.shape[0],), dtype) if warm_w is None
+              else jnp.pad(jnp.asarray(warm_w, dtype),
+                           ((0, Xs.shape[0] - n),)))
+        arrs = _sven_sharded_primal_jit(Xs, ys, t_op, l2_op, ww, mesh=mesh,
+                                        n_orig=n, config=config)
     return SvenSolution(beta=arrs.beta, alpha=arrs.alpha, mode=mode,
                         iters=arrs.iters, opt_residual=arrs.opt_residual,
                         kkt=arrs.kkt, w=arrs.w)

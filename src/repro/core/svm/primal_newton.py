@@ -107,20 +107,38 @@ def primal_newton_machine(
 
         dstep = _cg(hess_mv, grad, cg_iters, hyper.tol * 1e-2)
 
-        # Backtracking (Armijo) line search on f along -dstep.
-        f0 = f_value(w, C)
+        # Backtracking (Armijo) line search on f along -dstep, LINEARIZED:
+        # matvec is linear, so Xhat (w - s d) = o - s (Xhat d) — one extra
+        # matvec (od) per Newton step and every f evaluation becomes pure
+        # replicated vector math. This hoists the per-evaluation matvec out
+        # of the search loop: in the row-sharded primal machine each matvec
+        # is a psum, so the old form paid one collective per backtracking
+        # halving (plus one for f0) that the replicated operands make
+        # redundant; on one device it saves the O(np) GEMV per halving.
+        od = matvec(dstep)
+        ww_ = w @ w
+        wd = w @ dstep
+        dd = dstep @ dstep
+
+        def f_line(s):
+            m = yhat * (o - s * od)
+            xi = jnp.where(m < 1.0, 1.0 - m, 0.0)
+            return (0.5 * (ww_ - 2.0 * s * wd + s * s * dd) + C * (xi @ xi))
+
+        f0 = f_line(jnp.asarray(0.0, dtype))
         gd = grad @ dstep
 
         def ls_body(ls):
             s, _ = ls
-            return s * 0.5, f_value(w - s * 0.5 * dstep, C)
+            return s * 0.5, f_line(s * 0.5)
 
         def ls_cond(ls):
             s, fv = ls
             return (fv > f0 - 1e-4 * s * gd) & (s > 1e-10)
 
         s, _ = jax.lax.while_loop(
-            ls_cond, ls_body, (jnp.asarray(1.0, dtype), f_value(w - dstep, C)))
+            ls_cond, ls_body, (jnp.asarray(1.0, dtype),
+                               f_line(jnp.asarray(1.0, dtype))))
         gnorm = jnp.max(jnp.abs(grad))
         # ~(> tol) rather than (<= tol): a NaN residual counts as terminal,
         # so a diverged solve exits instead of spinning to max_iters.

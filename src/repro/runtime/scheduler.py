@@ -22,9 +22,10 @@ heavy traffic rides full vmapped executables. Solves go through
 `core.batch.sven_batch` / `core.api.enet_batch`, which means (a) steady-
 state traffic re-uses one compiled executable per (bucket, batch, form)
 shape — `trace_counts()` stays constant under load, asserted in CI — and
-(b) under an active `repro.dist.mesh_context` every stacked operand takes
-the rule table's "batch" axis placement, fanning buckets across the
-data-parallel mesh.
+(b) multi-device placement is ROUTED per launch: the `core.routing` cost
+model prices each (bucket, batch) shape on the calibrated mesh and only
+fans the batch axis out when that wins over a single device (an explicit
+Mesh or `route="batch"` pins the fan-out).
 
 Warm starts come from `runtime.cache.SolutionCache`: hits are handed to the
 stacked solve as initial iterates (zero rows = cold start, so mixed
@@ -79,12 +80,19 @@ def stack_padded(reqs, bn: int, bp: int, b_pad: int, dtype):
 
 
 class EnResult(NamedTuple):
-    """Per-request solve result, unpadded back to the request's own p."""
+    """Per-request solve result, unpadded back to the request's own p.
 
-    beta: jax.Array           # (p,)
+    `status` is "ok" for a solved request; "deadline_exceeded" marks a
+    request whose deadline had already passed when a failure-recovery
+    requeue re-examined it — those complete WITHOUT a solve (beta is None)
+    instead of looping through the bucket ladder forever.
+    """
+
+    beta: jax.Array           # (p,) — None when status != "ok"
     iters: jax.Array          # solver iterations spent (padded problem)
     kkt: jax.Array            # EN KKT violation of the padded problem
     bucket: tuple             # (n_bucket, p_bucket) executable this ran on
+    status: str = "ok"        # "ok" | "deadline_exceeded"
 
 
 @dataclasses.dataclass
@@ -168,6 +176,7 @@ class ContinuousScheduler:
                  max_wait: Optional[float] = 0.01,
                  cache="default", fixed_batch: bool = False,
                  auto_launch_full: bool = True, mesh="auto",
+                 route: str = "auto",
                  clock=time.perf_counter, dtype=jnp.float64):
         if max_batch < 1 or min_n < 1 or min_p < 1:
             raise ValueError(f"ContinuousScheduler: max_batch/min_n/min_p "
@@ -182,12 +191,20 @@ class ContinuousScheduler:
         self.min_p = min_p
         self.max_wait = max_wait
         self.cache = SolutionCache() if cache == "default" else cache
-        # mesh="auto": place bucket executables' batch axis across the
-        # process's devices when there is more than one; None = single
-        # device, exactly the seed behavior. An explicit Mesh pins placement.
+        # mesh="auto": OFFER the process's devices when there is more than
+        # one — whether a bucket launch actually fans out is decided per
+        # (shape, batch) by the core.routing cost model at dispatch. None =
+        # single device, exactly the seed behavior. An explicit Mesh PINS
+        # placement (routing is skipped); `route` pins the layout for auto
+        # meshes ("batch" = always fan out, "single" = never).
+        if route not in ("auto", "batch", "single"):
+            raise ValueError(f"ContinuousScheduler: route must be "
+                             f"auto|batch|single (got {route!r})")
+        self._mesh_pinned = mesh != "auto" and mesh is not None
         if mesh == "auto":
             mesh = dist.data_mesh() if jax.device_count() > 1 else None
         self.mesh = mesh
+        self.route = route
         self.fixed_batch = fixed_batch
         self.auto_launch_full = auto_launch_full
         self.clock = clock
@@ -268,8 +285,26 @@ class ContinuousScheduler:
         return reqs
 
     def requeue(self, reqs: List[EnRequest]) -> None:
-        """Put requests back into the admission queue (failure recovery)."""
+        """Put requests back into the admission queue (failure recovery).
+
+        Re-admission re-checks each deadline against the NOW LATER clock: a
+        request whose deadline has already passed completes immediately
+        with status="deadline_exceeded" (a terminal result, beta=None)
+        instead of re-entering the bucket ladder — where its expired
+        deadline would fire it straight back into the launch that just
+        failed, an infinite requeue loop under any persistent fault.
+        `deadline=inf` (max_wait=None, the drain-on-demand engines) never
+        expires, so those requeues keep the seed's retry-forever semantics.
+        """
+        now = self.clock()
         for r in reqs:
+            if r.deadline <= now:
+                self._results[r.req_id] = EnResult(
+                    beta=None, iters=np.int64(0), kkt=math.inf,
+                    bucket=self.bucket_of(*r.X.shape),
+                    status="deadline_exceeded")
+                self.metrics.completed([r.req_id], now)
+                continue
             key = self.bucket_of(*r.X.shape) + (r.form,)
             self._buckets.setdefault(key, []).append(r)
             heapq.heappush(self._deadlines, (r.deadline, r.req_id, key))
@@ -383,10 +418,11 @@ class ContinuousScheduler:
         try:
             inf = self._dispatch(key, chunk)
         except Exception:
-            # a failed dispatch must not lose the queue: put the chunk back
-            self._buckets.setdefault(key, [])[:0] = chunk
-            for r in chunk:
-                heapq.heappush(self._deadlines, (r.deadline, r.req_id, key))
+            # a failed dispatch must not lose the queue: requeue the chunk
+            # (which completes already-expired requests as
+            # deadline_exceeded rather than spinning them through the
+            # ladder again — see requeue())
+            self.requeue(chunk)
             raise
         self._in_flight.append(inf)
         now = self.clock()
@@ -421,12 +457,14 @@ class ContinuousScheduler:
         """Pad, stack, warm-start and launch one bucket — NO blocking: the
         returned arrays are futures under JAX async dispatch.
 
-        Under a configured mesh the launch runs inside `dist.mesh_context`,
-        so `sven_batch`/`enet_batch` place every stacked operand with the
-        rule table's "batch" axis — the bucket's problems fan out across
-        the data-parallel mesh (a batch the mesh size does not divide
-        resolves to replicated placement: graceful single-device fallback,
-        see dist.resolve_spec)."""
+        Mesh placement is ROUTED, not assumed: with an auto mesh the
+        `core.routing` cost model prices this (bn, bp, b_pad) launch and
+        the fan-out only happens when it wins — small buckets stay on one
+        device (the PR 6 regression fix). A pinned mesh (explicit Mesh at
+        construction) or `route="batch"` always enters the mesh context;
+        inside it, `sven_batch`/`enet_batch` get the decision pinned so
+        they do not re-route (their structural vetoes — e.g. a batch the
+        mesh does not divide — still apply and fall back to one device)."""
         bn, bp, form = key
         b_real = len(reqs)
         b_pad = (self.max_batch if self.fixed_batch
@@ -437,21 +475,32 @@ class ContinuousScheduler:
         l2b = np.asarray([r.lambda2 for r in reqs] + fill, self.dtype)
         wa, ww, wb, wt, wnu, hot = self._warm_arrays(reqs, bn, bp, b_pad, form)
 
-        ctx = (dist.mesh_context(self.mesh) if self.mesh is not None
+        mesh = self.mesh
+        if (mesh is not None and not self._mesh_pinned
+                and self.route != "batch"):
+            from repro.core import routing
+            decision = routing.route_batch(
+                bn, bp, b_pad, mesh,
+                form="penalized" if form == PENALIZED else "constrained",
+                route=self.route)
+            if decision.path != "batch":
+                mesh = None
+        ctx = (dist.mesh_context(mesh) if mesh is not None
                else contextlib.nullcontext())
+        route = "batch" if mesh is not None else "auto"
         with ctx:
             if form == PENALIZED:
                 warm = EnetCarry(beta=wb, alpha=wa, w=ww, t=wt, nu=wnu)
                 pts, carry = enet_batch(Xb, yb, lamb, l2b, self.path_config,
                                         warm=warm, has_warm=hot,
-                                        return_carry=True)
+                                        return_carry=True, route=route)
                 inf = _InFlight(key=key, reqs=tuple(reqs), beta=pts.beta,
                                 iters=pts.sven_iters, kkt=pts.kkt,
                                 alpha=carry.alpha, w=carry.w, t_out=pts.t,
                                 nu_out=pts.nu)
             else:
                 sol = sven_batch(Xb, yb, lamb, l2b, self.config,
-                                 warm_alpha=wa, warm_w=ww)
+                                 warm_alpha=wa, warm_w=ww, route=route)
                 inf = _InFlight(key=key, reqs=tuple(reqs), beta=sol.beta,
                                 iters=sol.iters, kkt=sol.kkt, alpha=sol.alpha,
                                 w=sol.w, t_out=lamb, nu_out=jnp.zeros_like(lamb))

@@ -1,13 +1,18 @@
-"""ISSUE 5: the sharded solve path and its bugfix satellites.
+"""ISSUE 5 + ISSUE 6: the sharded solve path, cost-model routing, and
+their bugfix satellites.
 
 Single-process tests cover the 1-device-mesh bitwise-parity contract of
-`sven_sharded`, the explicit kernel backend/interpret threading (the
+`sven_sharded` and `sven_routed`, the router's trivial/pinned semantics,
+the CV fold-chunk keying on RESOLVED placement (the nested-context
+regression), the explicit kernel backend/interpret threading (the
 `_on_cpu()` trace-time sniffing regression), the SolutionCache lambda-edge
 keying (lasso-only / pure-ridge repeat traffic) and the lambda1 = 0
 screening guard. Real multi-device behavior — cross-device parity for
-sven / enet_path / CV at <= 1e-10, and the property that bucket placement
-never reorders results across device counts 1/2/8 — runs in subprocesses
-with forced host devices, so this test session keeps its real device set.
+sven / sven_routed / enet_path / CV at <= 1e-10, the routing decision
+table never pricing the chosen path above single-device, and the property
+that bucket placement never reorders results across device counts 1/2/8 —
+runs in subprocesses with forced host devices, so this test session keeps
+its real device set.
 """
 import json
 import math
@@ -19,10 +24,12 @@ import textwrap
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro import dist
-from repro.core import sven, sven_sharded
+from repro.core import cross_validate, sven, sven_routed, sven_sharded
 from repro.core.api import enet
+from repro.core.routing import route_batch, route_solve
 from repro.core.screening import gap_safe_screen
 from repro.core.sven import SvenConfig, resolve_backend, trace_counts
 from repro.data.synthetic import make_regression
@@ -187,6 +194,59 @@ def test_batch_mesh_graceful_fallback():
 
 
 # ---------------------------------------------------------------------------
+# cost-model routing (core/routing.py): in-process contracts; the >1-device
+# decision table runs in subprocesses below
+# ---------------------------------------------------------------------------
+
+def test_route_one_device_trivial_and_validation():
+    d = route_solve(100, 24, mesh=dist.data_mesh(1))
+    assert d.path == "single" and d.costs == {"single": 0.0}
+    d = route_batch(48, 12, 8, dist.data_mesh(1), form="penalized")
+    assert d.path == "single"
+    with pytest.raises(ValueError, match="route must be"):
+        route_solve(100, 24, route="fastest")
+    with pytest.raises(ValueError, match="route must be"):
+        route_batch(100, 24, 8, route="sharded")
+
+
+def test_sven_routed_one_device_matches_sven_bitwise():
+    """On a 1-device mesh every route pin degenerates to plain `sven` (the
+    same executable), so parity is bitwise, not approximate."""
+    X, y, _ = make_regression(100, 24, seed=0)
+    s0 = sven(X, y, 1.5, 1.0)
+    for route in ("auto", "single", "sharded"):
+        s1 = sven_routed(X, y, 1.5, 1.0, mesh=dist.data_mesh(1), route=route)
+        np.testing.assert_array_equal(np.asarray(s1.beta),
+                                      np.asarray(s0.beta))
+
+
+def test_auto_fold_chunk_keys_on_resolved_placement():
+    """Regression (ISSUE 6 satellite): the lockstep width keys on where the
+    folds are PLACED, never on process-global device counts."""
+    from repro.core.cv import _auto_fold_chunk
+    if jax.default_backend() == "cpu":
+        assert _auto_fold_chunk(8, None) == 1
+        assert _auto_fold_chunk(8, dist.data_mesh(1)) == 1
+    mesh = dist.data_mesh(jax.device_count())
+    if mesh.size > 1:
+        assert _auto_fold_chunk(8, mesh) == 8
+
+
+def test_cv_auto_mesh_inside_one_device_context():
+    """The nested-context case: an outer 1-device `mesh_context` with
+    mesh="auto" must resolve to single-device placement (chunk keyed on the
+    RESOLVED mesh, not on the context's existence) and match the
+    no-context run exactly."""
+    X, y, _ = make_regression(40, 8, seed=6)
+    cv0 = cross_validate(X, y, k=4, n_lambdas=5, mesh=None)
+    with dist.mesh_context(dist.data_mesh(1)):
+        cv1 = cross_validate(X, y, k=4, n_lambdas=5, mesh="auto")
+    np.testing.assert_allclose(np.asarray(cv1.mse_path),
+                               np.asarray(cv0.mse_path), atol=1e-12)
+    assert cv1.lambda_min == cv0.lambda_min
+
+
+# ---------------------------------------------------------------------------
 # real multi-device runs (subprocess with forced host devices)
 # ---------------------------------------------------------------------------
 
@@ -263,7 +323,34 @@ _PARITY_8DEV = textwrap.dedent("""
     assert cv1.lambda_min == cv0.lambda_min
     print("cv8 OK")
 
-    # 5) psum-reduced hinge stats vs the jnp oracle
+    # 4b) nested context with k = 6 NOT divisible by the 8-device mesh:
+    # auto resolution must decline the mesh (resolved placement = single
+    # device) and return the no-context answer exactly
+    with dist.mesh_context(mesh):
+        cv6a = cross_validate(Xc, yc, k=6, n_lambdas=6, mesh="auto")
+    cv6b = cross_validate(Xc, yc, k=6, n_lambdas=6, mesh=None)
+    d = float(jnp.abs(cv6a.mse_path - cv6b.mse_path).max())
+    assert d <= TOL, f"cv nested-context dev {d}"
+    assert cv6a.lambda_min == cv6b.lambda_min
+    print("cv_nested8 OK")
+
+    # 5) routed solves (ISSUE 6): every route pin — including the forced
+    # sharded layout — matches the single-device answer in both regimes
+    from repro.core.routing import route_solve, sven_routed
+    for route in ("auto", "single", "sharded"):
+        d = float(jnp.abs(
+            sven_routed(X, y, 1.5, 1.0, mesh=mesh, route=route).beta
+            - sven(X, y, 1.5, 1.0).beta).max())
+        assert d <= TOL, f"routed({route}) dual dev {d}"
+        d = float(jnp.abs(
+            sven_routed(Xp, yp, 0.8, 0.7, mesh=mesh, route=route).beta
+            - sven(Xp, yp, 0.8, 0.7).beta).max())
+        assert d <= TOL, f"routed({route}) primal dev {d}"
+    dec = route_solve(100, 24, mesh=mesh)
+    assert dec.costs[dec.path] <= dec.costs["single"] + 1e-12
+    print("routed8 OK")
+
+    # 6) psum-reduced hinge stats vs the jnp oracle
     Xs2, ys2 = shard_rows(mesh, X, y)
     w = jax.random.normal(jax.random.PRNGKey(0), (Xs2.shape[0],))
     m, a, l, g = sharded_hinge_stats(mesh, Xs2, ys2, 1.5, w, 2.0)
@@ -282,8 +369,61 @@ def test_multidevice_parity_subprocess():
                        env=env, capture_output=True, text=True, timeout=900)
     assert r.returncode == 0, r.stdout + r.stderr
     for tag in ("sven_sharded8", "batch8", "enet_path8", "cv8",
-                "hinge_stats8"):
+                "cv_nested8", "routed8", "hinge_stats8"):
         assert f"{tag} OK" in r.stdout
+
+
+_ROUTING_DECISIONS = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(dc)d"
+    import sys; sys.path.insert(0, "src")
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    from repro import dist
+    from repro.core.routing import calibrate, route_batch, route_solve
+
+    mesh = dist.data_mesh()
+    assert mesh.size == %(dc)d
+    cal = calibrate(mesh)
+    assert cal.flops_per_s > 0 and cal.psum_latency_s >= 0.0
+    assert cal.fanout_speedup > 0 and cal.replicated_slowdown > 0
+
+    EPS = 1e-12
+    for n, p in [(64, 8), (256, 16), (768, 48), (4096, 16), (32768, 8),
+                 (50, 64)]:
+        d = route_solve(n, p, mesh=mesh)
+        assert d.path in d.costs, (n, p, d)
+        assert d.costs[d.path] <= d.costs["single"] + EPS, (n, p, d)
+        # pins are honored while still reporting the model's prices
+        assert route_solve(n, p, mesh=mesh, route="single").path == "single"
+        s = route_solve(n, p, mesh=mesh, route="sharded")
+        assert s.path == "sharded" and "sharded" in s.costs
+    for n, p, B in [(48, 12, %(dc)d), (256, 16, 2 * %(dc)d), (64, 10, 64)]:
+        d = route_batch(n, p, B, mesh, form="penalized", points=8)
+        assert d.costs[d.path] <= d.costs["single"] + EPS, (n, p, B, d)
+        assert route_batch(n, p, B, mesh, route="batch").path == "batch"
+    # the regression shape: a tiny lone solve must stay single-device —
+    # collective latency + multi-device dispatch can never pay for 64x8
+    assert route_solve(64, 8, mesh=mesh).path == "single"
+    print("ROUTING OK")
+""")
+
+
+def test_routing_decisions_never_price_worse_than_single():
+    """Property (ISSUE 6 satellite): on 2 and 8 devices, across dual/primal
+    shapes and batch sizes, the router never picks a path the calibrated
+    cost model prices above single-device, pinned routes are honored, and
+    the tiny-lone-solve regression shape always routes single. (The
+    1-device table is trivial and covered in-process above.)"""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    for dc in (2, 8):
+        r = subprocess.run([sys.executable, "-c",
+                            _ROUTING_DECISIONS % {"dc": dc}], cwd=os.getcwd(),
+                           env=env, capture_output=True, text=True,
+                           timeout=900)
+        assert r.returncode == 0, f"dc={dc}:\n{r.stdout}\n{r.stderr}"
+        assert "ROUTING OK" in r.stdout
 
 
 _BUCKET_ORDER = textwrap.dedent("""

@@ -129,6 +129,50 @@ def test_dispatch_failure_requeues(monkeypatch):
                                atol=ATOL)
 
 
+def test_requeue_rechecks_deadline(monkeypatch):
+    """Regression (ISSUE 6 satellite): requeue-on-failure used to re-admit
+    without re-checking the deadline, so an expired request went straight
+    back into the launch that just failed — a tight retry loop. An expired
+    request must instead complete terminally with status="deadline_exceeded"
+    (beta None), while unexpired requests are re-admitted and still solve."""
+    fake_now = [0.0]
+    sched = ContinuousScheduler(max_batch=8, max_wait=0.5,
+                                clock=lambda: fake_now[0])
+    X, y, t = _problem(20, 10, seed=22)
+    rid_live = sched.submit(X, y, t=t, lambda2=1.0)
+    rid_dead = sched.submit(X, y, t=t * 1.1, lambda2=1.0, deadline=1.0)
+
+    calls = []
+
+    def boom(*a, **k):
+        calls.append(1)
+        raise RuntimeError("boom")
+
+    monkeypatch.setattr(sched, "_dispatch", boom)
+    fake_now[0] = 2.0   # both deadlines (0 + max_wait = 0.5, and 1.0) passed
+    with pytest.raises(RuntimeError, match="boom"):
+        sched.flush()
+    monkeypatch.undo()
+    assert sched.pending_requests == []
+    res_dead = sched.result(rid_dead)
+    assert res_dead.status == "deadline_exceeded" and res_dead.beta is None
+    res_live = sched.result(rid_live)
+    assert res_live.status == "deadline_exceeded" and res_live.beta is None
+
+    # unexpired arm: deadline far in the (fake) future survives the failed
+    # dispatch, stays pending, and solves once dispatch works again
+    rid2 = sched.submit(X, y, t=t, lambda2=1.0, deadline=100.0)
+    monkeypatch.setattr(sched, "_dispatch", boom)
+    with pytest.raises(RuntimeError, match="boom"):
+        sched.flush()
+    monkeypatch.undo()
+    assert [r.req_id for r in sched.pending_requests] == [rid2]
+    out = sched.drain()
+    assert out[rid2].status == "ok"
+    np.testing.assert_allclose(out[rid2].beta, sven(X, y, t, 1.0).beta,
+                               atol=ATOL)
+
+
 def test_submit_validation():
     sched = ContinuousScheduler()
     X, y, t = _problem(20, 10, seed=4)
