@@ -1,0 +1,142 @@
+"""Per-backend kernel micro-bench — the ``kernels`` section of BENCH_path.json.
+
+Times the fused shifted-Gram and hinge-stats kernels through every registered
+Pallas body (TPU and GPU/Triton bodies run in interpret mode on CPU hosts,
+compiled natively when the matching accelerator is present) against the
+jitted pure-jnp oracle, records the autotuned tile choice, and runs the
+bf16-storage + iterative-refinement solve probe. ``validate_artifact.py``
+gates the section:
+
+  - CPU runners:  every measured body at interpret-mode parity with the
+    oracle (relative deviation <= 1e-4, i.e. f32 accumulation roundoff);
+  - GPU runners:  fused gram >= 1.5x over the unfused
+    materialize-then-matmul reference (interpret timing is pathological,
+    so no speed gate on CPU);
+  - everywhere:   the bf16+refinement dual solve within 1e-10 of the
+    full-precision solve.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+
+
+def _rel_dev(a, b) -> float:
+    scale = max(1.0, float(jnp.max(jnp.abs(b))))
+    return float(jnp.max(jnp.abs(jnp.asarray(a, jnp.float64) -
+                                jnp.asarray(b, jnp.float64)))) / scale
+
+
+@jax.jit
+def _unfused_gram(X, y, t):
+    """Materialize-then-matmul reference: build Zhat (n, 2p) explicitly and
+    take one big Gram — what the fused kernel's one-pass 4-quadrant identity
+    (and its GPU >= 1.5x gate) is measured against."""
+    yt = y[:, None] / t
+    Z = jnp.concatenate([X - yt, -(X + yt)], axis=1)
+    return Z.T @ Z
+
+
+def run(n: int = 768, p: int = 64, reps: int = 3) -> dict:
+    from repro.core.sven import SvenConfig, sven
+    from repro.kernels import autotune, ops, registry
+
+    platform = jax.default_backend()
+    resolved = registry.resolve_kernel_backend(None)
+    _, interp = registry.split_backend(resolved)
+
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.standard_normal((n, p)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((n,)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((n,)), jnp.float32)
+    t, C = 1.7, 0.5
+
+    # Bodies measured: always the oracle and both Pallas bodies (interpret
+    # mode off-accelerator), plus the compiled resolved backend on hardware.
+    backends = ["ref", "tpu_interpret", "gpu_interpret"]
+    if not interp and resolved != "ref":
+        backends.append(resolved)
+
+    tiles = {}
+    for op in ("shifted_gram", "hinge_stats"):
+        chosen, source = autotune.resolve_tiles(op, resolved, n, p)
+        tiles[op] = {"tiles": chosen, "source": source}
+
+    K_ref = ops.shifted_gram(X, y, t, backend="ref")
+    stats_ref = ops.hinge_stats(X, y, t, w, C, backend="ref")
+
+    gram_seconds, hinge_seconds = {}, {}
+    gram_parity, hinge_parity = {}, {}
+    for be in backends:
+        K = ops.shifted_gram(X, y, t, backend=be)
+        gram_parity[be] = _rel_dev(K, K_ref)
+        gram_seconds[be] = time_call(
+            lambda be=be: ops.shifted_gram(X, y, t, backend=be), reps=reps)
+        st = ops.hinge_stats(X, y, t, w, C, backend=be)
+        hinge_parity[be] = max(_rel_dev(a, b) for a, b in zip(st, stats_ref))
+        hinge_seconds[be] = time_call(
+            lambda be=be: ops.hinge_stats(X, y, t, w, C, backend=be),
+            reps=reps)
+        emit(f"kernels_gram_{be}", gram_seconds[be],
+             f"rel_dev={gram_parity[be]:.1e}")
+        emit(f"kernels_hinge_stats_{be}", hinge_seconds[be],
+             f"rel_dev={hinge_parity[be]:.1e}")
+
+    unfused_s = time_call(_unfused_gram, X, y, jnp.asarray(t, X.dtype),
+                          reps=reps)
+    unfused_parity = _rel_dev(_unfused_gram(X, y, jnp.asarray(t, X.dtype)),
+                              K_ref)
+    emit("kernels_gram_unfused", unfused_s, f"rel_dev={unfused_parity:.1e}")
+
+    # bf16 storage + one full-precision refinement re-solve vs the plain
+    # XLA solve, both driven to tol=1e-12 on the same dual problem.
+    nn, pp = 256, 24
+    Xs = jnp.asarray(rng.standard_normal((nn, pp)) / np.sqrt(nn))
+    ys = jnp.asarray(rng.standard_normal((nn,)))
+    ts = 1.3
+    beta_ref = sven(Xs, ys, ts, 0.5,
+                    SvenConfig(mode="dual", backend="xla", tol=1e-12)).beta
+    beta_bf16 = sven(Xs, ys, ts, 0.5,
+                     SvenConfig(mode="dual", backend=resolved,
+                                precision="bf16", tol=1e-12)).beta
+    bf16_dev = float(jnp.max(jnp.abs(beta_bf16 - beta_ref)))
+    emit("kernels_bf16_refined", 0.0, f"max_dev={bf16_dev:.1e}")
+
+    measured_parities = (list(gram_parity.values())
+                         + list(hinge_parity.values()) + [unfused_parity])
+    parity_ok = max(measured_parities) <= 1e-4
+    on_gpu = platform in ("gpu", "cuda", "rocm")
+    gpu_speedup = (unfused_s / gram_seconds[resolved]
+                   if on_gpu and resolved in gram_seconds else None)
+    speedup_ok = None if gpu_speedup is None else bool(gpu_speedup >= 1.5)
+    kernels_ok = bool(parity_ok and bf16_dev <= 1e-10
+                      and speedup_ok is not False)
+
+    return {
+        "platform": platform,
+        "kernel_backend": resolved,
+        "n": n,
+        "p": p,
+        "tiles": tiles,
+        "gram_seconds": gram_seconds,
+        "hinge_stats_seconds": hinge_seconds,
+        "unfused_gram_seconds": unfused_s,
+        "gram_parity_rel": gram_parity,
+        "hinge_parity_rel": hinge_parity,
+        "unfused_parity_rel": unfused_parity,
+        "bf16_refined_max_dev": bf16_dev,
+        "gpu_speedup": gpu_speedup,
+        "parity_ok": bool(parity_ok),
+        "speedup_ok": speedup_ok,
+        "kernels_ok": kernels_ok,
+    }
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    import json
+
+    print(json.dumps(run(), indent=2, sort_keys=True))

@@ -2,8 +2,9 @@
 micro-benches. Prints ``name,us_per_call,derived`` CSV lines and writes the
 path-engine artifact ``BENCH_path.json`` (scan-vs-loop wall clock, trace
 counts, batch-vs-sequential speedup, CV throughput, serving runtime
-latency/throughput) whenever the ``path``/``batch``/``cv``/``serve``
-benches run — CI validates the artifact schema on CPU via
+latency/throughput, per-backend kernel timings/parity) whenever the
+``path``/``batch``/``cv``/``serve``/``dist_solve``/``kernels`` benches
+run — CI validates the artifact schema on CPU via
 ``benchmarks/validate_artifact.py``.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] \
@@ -29,8 +30,9 @@ def main() -> None:
 
     from benchmarks import (bench_batch, bench_crossover, bench_cv,
                             bench_dist_solve, bench_distributed,
-                            bench_lm_smoke, bench_nggp, bench_path,
-                            bench_pggn, bench_reduction_ops, bench_serve)
+                            bench_kernels, bench_lm_smoke, bench_nggp,
+                            bench_path, bench_pggn, bench_reduction_ops,
+                            bench_serve)
 
     mods = {
         "path": (lambda: bench_path.run(points=6)) if args.quick else bench_path.run,
@@ -40,6 +42,8 @@ def main() -> None:
                   if args.quick else bench_serve.run),
         "dist_solve": ((lambda: bench_dist_solve.run(n=384, p=32, reps=2))
                        if args.quick else bench_dist_solve.run),
+        "kernels": ((lambda: bench_kernels.run(n=384, p=32, reps=2))
+                    if args.quick else bench_kernels.run),
         "reduction_ops": bench_reduction_ops.run,
         "crossover": bench_crossover.run,
         "pggn": (lambda: bench_pggn.run(points=2)) if args.quick else bench_pggn.run,
@@ -54,7 +58,8 @@ def main() -> None:
     for name in picked:
         try:
             out = mods[name]()
-            if (name in ("path", "batch", "cv", "serve", "dist_solve")
+            if (name in ("path", "batch", "cv", "serve", "dist_solve",
+                         "kernels")
                     and isinstance(out, dict)):
                 artifact[name] = out
         except Exception:  # noqa: BLE001

@@ -9,9 +9,13 @@ CV at least matching the sequential loop, the continuous-batching runtime
 sustaining >= 2x the synchronous drain_reference throughput with warm-start
 cache hits under the adjacent-lambda load, the sharded solve path at
 <= 1e-10 parity with (and speedup-or-parity against) the single-device
-path on the 8-device host mesh, and the cost-model-routed solve never
+path on the 8-device host mesh, the cost-model-routed solve never
 landing meaningfully below single-device speed (`routed_ok` — the gate
-that keeps the always-shard 0.10x lone-solve regression from recurring).
+that keeps the always-shard 0.10x lone-solve regression from recurring),
+and the per-backend kernel section: Pallas bodies at interpret-mode
+parity with the ref oracle on CPU runners, fused gram >= 1.5x over the
+unfused materialize-then-matmul reference on GPU runners, and the
+bf16+iterative-refinement solve within 1e-10 everywhere.
 
     python benchmarks/validate_artifact.py [BENCH_path.json]
 """
@@ -52,6 +56,12 @@ REQUIRED_KEYS = {
         "batch_single_seconds", "batch_sharded_seconds", "batch_speedup",
         "max_dev_sharded_solve", "max_dev_sharded_batch", "speedup_or_parity",
         "routed_ok",
+    },
+    "kernels": {
+        "platform", "kernel_backend", "n", "p", "tiles", "gram_seconds",
+        "hinge_stats_seconds", "unfused_gram_seconds", "gram_parity_rel",
+        "hinge_parity_rel", "unfused_parity_rel", "bf16_refined_max_dev",
+        "gpu_speedup", "parity_ok", "speedup_ok", "kernels_ok",
     },
 }
 
@@ -117,6 +127,18 @@ def validate(artifact: dict) -> list:
           "path slower than single-device (the PR 5 always-shard 0.10x "
           "class) — routed_speedup must be >= 1.0, or >= 0.8 with the "
           "router on the bit-identical single path")
+    kernels = artifact.get("kernels", {})
+    check("kernels", kernels.get("parity_ok") is True,
+          "a Pallas kernel body diverged from the ref oracle beyond f32 "
+          "accumulation roundoff (interpret-mode parity is the CPU gate)")
+    check("kernels", kernels.get("bf16_refined_max_dev", 1.0) <= 1e-10,
+          "bf16-storage solve with one full-precision refinement re-solve "
+          "drifted beyond 1e-10 of the full-precision solve")
+    check("kernels", kernels.get("speedup_ok") in (None, True),
+          "GPU fused shifted-gram below 1.5x over the unfused "
+          "materialize-then-matmul reference")
+    check("kernels", kernels.get("kernels_ok") is True,
+          "kernel section gate failed")
     return errors
 
 
@@ -134,6 +156,12 @@ def main() -> None:
                  f"(max dev {ds['max_dev_sharded_solve']:.1e}, "
                  f"routed->{ds['routed_path']} "
                  f"{ds['routed_speedup']:.2f}x)" if ds else "")
+    kn = artifact.get("kernels")
+    if kn:
+        spd = (f", gpu {kn['gpu_speedup']:.2f}x"
+               if kn.get("gpu_speedup") else "")
+        dist_note += (f", kernels {kn['kernel_backend']} "
+                      f"(bf16 dev {kn['bf16_refined_max_dev']:.1e}{spd})")
     print(f"[validate_artifact] {fname} OK: "
           f"path scan {artifact['path']['scan_vs_loop_speedup']:.2f}x, "
           f"cv batched {artifact['cv']['cv_batched_vs_sequential_speedup']:.2f}x, "

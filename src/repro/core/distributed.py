@@ -402,12 +402,20 @@ def _sven_sharded_dual_jit(stats, K, X, y, t, lambda2, warm_alpha, *,
     p = X.shape[1]
     dtype = X.dtype
     C = red.svm_C(lambda2, floor=config.lambda2_floor).astype(dtype)
+    kernel_K = K is not None          # static: pytree structure keys the jit
     if K is None:
         K = red.gram_from_stats(*stats)
     solver = (solve_dual_newton if config.solver == "newton"
               else solve_dual_fista)
     res = solver(lambda v: K @ v, 2 * p, C, dtype=dtype, tol=config.tol,
                  alpha0=warm_alpha)
+    if kernel_K and config.precision != "f32":
+        # iterative refinement, sharded flavor (DESIGN.md §10.3): re-solve
+        # matrix-free at full precision from the low-precision alpha. All
+        # global ops — the partitioner keeps X's rows sharded and inserts
+        # the same one-psum-per-product collectives as the stats path.
+        res = solver(red.SvenOperator(X=X, y=y, t=t).kernel_matvec, 2 * p, C,
+                     dtype=dtype, tol=config.tol, alpha0=res.alpha)
     beta = red.recover_beta(res.alpha, t)
     # w = Zhat @ alpha on the row-sharded X: global ops, the partitioner
     # keeps the row dimension sharded and gathers the (n,) result.
@@ -480,12 +488,12 @@ def sven_sharded(X: jax.Array, y: jax.Array, t, lambda2, config=None, *,
         # replicated solve program — the device reduces while the host
         # traces/dispatches the Newton setup (collective/compute overlap).
         stats = K = None
-        if config.backend == "pallas":
+        if config.backend != "xla":
             from repro.kernels.ops import sharded_shifted_gram
             K = sharded_shifted_gram(
                 mesh, Xs.astype(jnp.float32), ys.astype(jnp.float32),
-                jnp.asarray(t, jnp.float32),
-                interpret=config.interpret).astype(dtype)
+                jnp.asarray(t, jnp.float32), backend=config.backend,
+                precision=config.precision).astype(dtype)
         else:
             stats = sharded_stats(Xs, ys, t_op, mesh=mesh)
         wa = (jnp.zeros((2 * p,), dtype) if warm_alpha is None

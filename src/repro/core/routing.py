@@ -35,10 +35,18 @@ calibration microbenchmark (`calibrate`) measures, on the actual mesh,
                          one (the oversubscription tax the sharded path's
                          replicated Newton solve pays on host-sim meshes),
 
+    kernel_backend /     the RESOLVED kernel backend (kernels/registry.py)
+    gram_flops_per_s     serving the dual Gram pass, and its measured
+                         throughput — the data-pass term prices the real
+                         kernel, not an assumed XLA GEMM,
+
 and the router prices each layout's FLOPs + collectives with those numbers.
-Calibration is cached per (backend, device-count) — the knob:
-`calibrate(mesh, force=True)` re-measures, `clear_calibration()` resets
-(both exported; see README "Multi-device").
+Calibration is cached per (backend, device-count) in-process AND persisted
+to `<utils.cache_dir()>/calibration.json` keyed (platform, device count,
+jax version), so repeat processes skip the microbenchmark entirely — the
+knob: `calibrate(mesh, force=True)` re-measures (and overwrites the disk
+entry), `clear_calibration()` drops the in-process caches (both exported;
+see README "Multi-device").
 
 Escape hatch: every routed entry point takes `route=` ("auto" | a pinned
 path name) — `route="sharded"` forces the row-sharded layout regardless of
@@ -82,6 +90,14 @@ class Calibration(NamedTuple):
     psum_per_byte_s: float
     fanout_speedup: float
     replicated_slowdown: float
+    # the RESOLVED kernel backend the dual Gram pass will actually run on
+    # (kernels/registry.py) and its measured throughput — the data-pass
+    # term of the dual cost must price the real kernel, not assume an XLA
+    # GEMM. On interpret/ref backends the kernel rate falls back to the
+    # GEMM rate (interpret timings are pathological and the ref body IS an
+    # XLA GEMM).
+    kernel_backend: str = "ref"
+    gram_flops_per_s: float = 0.0
 
 
 class RouteDecision(NamedTuple):
@@ -108,10 +124,58 @@ _SINGLE_DEVICE = Calibration(devices=1, backend="any", flops_per_s=1e9,
 
 
 def clear_calibration() -> None:
-    """Drop all cached calibrations AND routing decisions (re-measure next
-    use) — the test/bench hook, and the answer to 'the machine changed'."""
+    """Drop all in-process calibrations AND routing decisions (re-read the
+    disk cache / re-measure next use) — the test/bench hook. To also force
+    fresh MEASUREMENTS across processes, call `calibrate(mesh, force=True)`
+    (which overwrites the disk entry) or delete
+    `<utils.cache_dir()>/calibration.json`."""
     _CALIBRATIONS.clear()
     _DECISIONS.clear()
+
+
+def _disk_key(backend: str, ndev: int) -> str:
+    import jax as _jax
+    return f"{backend}|{ndev}dev|jax{_jax.__version__}"
+
+
+def _load_disk_calibration(backend: str, ndev: int):
+    from repro import utils
+
+    entry = utils.disk_cache_load("calibration").get(_disk_key(backend, ndev))
+    if not isinstance(entry, dict) or set(entry) != set(Calibration._fields):
+        return None
+    try:
+        return Calibration(**entry)
+    except TypeError:
+        return None
+
+
+def _store_disk_calibration(cal: Calibration) -> None:
+    from repro import utils
+
+    utils.disk_cache_update(
+        "calibration", {_disk_key(cal.backend, cal.devices): cal._asdict()})
+
+
+def _gram_kernel_rate(flops_per_s: float) -> tuple[str, float]:
+    """(resolved kernel backend, measured Gram-pass FLOPs/s) for this
+    process's default platform. Compiled backends get a real measurement of
+    `kernels.shifted_gram`; interpret/ref backends keep the GEMM rate."""
+    from repro.kernels import ops as kops
+    from repro.kernels import registry
+
+    kb = registry.resolve_kernel_backend(None)
+    body, interpret = registry.split_backend(kb)
+    if interpret or body == "ref":
+        return kb, flops_per_s
+    n, p = 2048, 256
+    X = jnp.ones((n, p), jnp.float32)
+    y = jnp.ones((n,), jnp.float32)
+    try:
+        t = _best_of(lambda: kops.shifted_gram(X, y, 1.0, backend=kb))
+    except Exception:  # noqa: BLE001 — no functional kernel: price as GEMM
+        return kb, flops_per_s
+    return kb, (2.0 * n * p * p) / max(t, 1e-9)
 
 
 def _best_of(fn, reps: int = 3) -> float:
@@ -140,19 +204,32 @@ def calibrate(mesh: Optional[Mesh], *, force: bool = False) -> Calibration:
     key = (backend, ndev)
     if not force and key in _CALIBRATIONS:
         return _CALIBRATIONS[key]
+    if not force:
+        # the repeat-process fast path: a prior run on this (platform,
+        # device count, jax version) already paid for the microbenchmark —
+        # BENCH showed the calibration overhead alone dragging routed
+        # solves to 0.93x on the bit-identical "single" path.
+        cal = _load_disk_calibration(backend, ndev)
+        if cal is not None:
+            _CALIBRATIONS[key] = cal
+            return cal
 
     m = 192                                       # GEMM probe: 2*m^3 FLOPs
     A = jnp.ones((m, m), jnp.float32)
     gemm = jax.jit(lambda a: a @ a)
     t_gemm = _best_of(lambda: gemm(A))
     flops_per_s = (2.0 * m ** 3) / max(t_gemm, 1e-9)
+    kernel_backend, gram_flops_per_s = _gram_kernel_rate(flops_per_s)
 
     if ndev <= 1:
         cal = Calibration(devices=ndev, backend=backend,
                           flops_per_s=flops_per_s, psum_latency_s=0.0,
                           psum_per_byte_s=0.0, fanout_speedup=1.0,
-                          replicated_slowdown=1.0)
+                          replicated_slowdown=1.0,
+                          kernel_backend=kernel_backend,
+                          gram_flops_per_s=gram_flops_per_s)
         _CALIBRATIONS[key] = cal
+        _store_disk_calibration(cal)
         return cal
 
     axes = tuple(mesh.axis_names)
@@ -196,8 +273,11 @@ def calibrate(mesh: Optional[Mesh], *, force: bool = False) -> Calibration:
                       psum_latency_s=psum_latency_s,
                       psum_per_byte_s=psum_per_byte_s,
                       fanout_speedup=fanout_speedup,
-                      replicated_slowdown=replicated_slowdown)
+                      replicated_slowdown=replicated_slowdown,
+                      kernel_backend=kernel_backend,
+                      gram_flops_per_s=gram_flops_per_s)
     _CALIBRATIONS[key] = cal
+    _store_disk_calibration(cal)
     _DECISIONS.clear()
     return cal
 
@@ -227,14 +307,18 @@ def _solve_flops(n: int, p: int, mode: str) -> tuple:
 def _solve_costs(n: int, p: int, mode: str, cal: Calibration) -> dict:
     """Predicted seconds for one solve under each layout."""
     F = cal.flops_per_s
+    # the dual data pass runs on the RESOLVED kernel backend (Pallas Gram
+    # on tpu/gpu, XLA GEMM otherwise) — price it at that kernel's measured
+    # rate, not the generic GEMM rate
+    G = cal.gram_flops_per_s or F
     data, iters = _solve_flops(n, p, mode)
-    costs = {"single": (data + iters) / F}
+    costs = {"single": data / G + iters / F}
     if cal.devices > 1:
         if mode == "dual":
             # data pass shards perfectly (one psum of G/u/s closes it); the
             # projected Newton runs REPLICATED on the assembled kernel, so
             # it pays the replication tax, not a 1/ndev discount.
-            sharded = (data / (F * cal.fanout_speedup * cal.devices)
+            sharded = (data / (G * cal.fanout_speedup * cal.devices)
                        + _psum_cost(cal, p * p + p + 1)
                        + iters * cal.replicated_slowdown / F
                        + 2.0 * cal.psum_latency_s      # w recovery + kkt

@@ -86,24 +86,48 @@ class SvenSolution(NamedTuple):
     w: jax.Array              # primal SVM iterate — warm-start carrier
 
 
+#: every accepted SvenConfig.backend spelling: "xla" = no kernels module at
+#: all (pure-jnp matrix-free reduction); "auto" = kernel registry, body
+#: resolved from the operands' platform; "pallas" = deprecated alias of
+#: "auto" (the pre-enum spelling); the rest are RESOLVED kernel backends
+#: (kernels/registry.py: body + execution mode).
+BACKENDS = ("xla", "auto", "pallas",
+            "tpu", "gpu", "tpu_interpret", "gpu_interpret", "ref")
+PRECISIONS = ("f32", "bf16", "tf32")
+
+
 @dataclasses.dataclass(frozen=True)
 class SvenConfig:
     mode: str = "auto"            # "auto" | "primal" | "dual"
     matrix_free: bool = True      # SvenOperator vs explicit Xnew
     cache_kernel: str = "auto"    # "auto" | "blocks" | "never" (dual only)
     solver: str = "newton"        # "newton" | "fista" (dual only)
-    backend: str = "xla"          # "xla" | "pallas" (TPU-tiled hot ops)
-    # Pallas interpret mode. None = unresolved: the public entry points pin
-    # it from the CONCRETE input arrays' committed devices before tracing
-    # (resolve_backend below) — never from the process default backend at
-    # trace time, which is wrong for arrays placed on a non-default device
-    # and for shard_map-local kernels (DESIGN.md §9.3).
+    backend: str = "xla"          # one of BACKENDS (DESIGN.md §10)
+    # DEPRECATED two-flag-era Pallas interpret switch. None = unresolved:
+    # `resolve_backend` folds any explicit value into the backend enum
+    # (backend "auto" + interpret=True -> "<body>_interpret") and
+    # normalizes this field back to None so equivalent spellings hash to
+    # the SAME jit key. New code should pass a resolved backend instead.
     interpret: Optional[bool] = None
+    # kernel MAC/storage precision: "f32" | "bf16" | "tf32". Applies to the
+    # registry-backed kernel paths only ("xla" and the ref oracle always
+    # compute at full input precision); low-precision dual solves get one
+    # full-precision iterative-refinement re-solve (DESIGN.md §10.3) so the
+    # <= 1e-10 parity gates still hold.
+    precision: str = "f32"
     tol: float = 1e-8
     max_newton: int = 60
     cg_iters: int = 300
     kernel_cache_max_m: int = 8192   # cache K when 2p <= this
     lambda2_floor: float = red.LAMBDA2_FLOOR  # Lasso limit: C capped at 1/(2*floor)
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(f"SvenConfig.backend must be one of {BACKENDS}, "
+                             f"got {self.backend!r}")
+        if self.precision not in PRECISIONS:
+            raise ValueError(f"SvenConfig.precision must be one of "
+                             f"{PRECISIONS}, got {self.precision!r}")
 
 
 def _pick_mode(n: int, p: int, cfg: SvenConfig) -> str:
@@ -113,21 +137,37 @@ def _pick_mode(n: int, p: int, cfg: SvenConfig) -> str:
 
 
 def resolve_backend(config: SvenConfig, *arrays) -> SvenConfig:
-    """Pin the Pallas interpret choice into the (static, jit-keyed) config.
+    """Pin the kernel backend enum into the (static, jit-keyed) config.
 
     Resolution happens BEFORE tracing, against the devices the concrete
-    input arrays are committed to (`kernels.ops.resolve_interpret`), so the
-    compiled executable matches where the data actually lives; two
-    placements that need different kernel modes get different jit keys. A
-    no-op for the XLA backend and for configs that already carry an
-    explicit choice.
-    """
-    if config.backend != "pallas" or config.interpret is not None:
-        return config
-    from repro.kernels.ops import resolve_interpret
+    input arrays are committed to (`kernels.registry.resolve_kernel_backend`
+    — never the process default backend at trace time, DESIGN.md §9.3), so
+    the compiled executable matches where the data actually lives; two
+    placements that need different kernel bodies get different jit keys.
 
-    return dataclasses.replace(config,
-                               interpret=resolve_interpret(None, *arrays))
+    The deprecated spellings fold in here: backend "pallas" is an alias of
+    "auto", and an explicit `interpret=` flag is pushed into the backend
+    value ("<body>_interpret") and then normalized to None — so e.g.
+    `SvenConfig(backend="pallas")` and `SvenConfig(backend="pallas",
+    interpret=True)` resolve to the SAME config (same jit key) on CPU. A
+    no-op (same object) for the "xla" backend and for already-resolved
+    configs, which `api.resolve_path_config` relies on.
+    """
+    if config.backend == "xla":
+        if config.interpret is None:
+            return config
+        return dataclasses.replace(config, interpret=None)
+    from repro.kernels import registry
+
+    resolved = registry.resolve_kernel_backend(
+        None if config.backend in ("auto", "pallas") else config.backend,
+        *arrays)
+    if config.interpret is not None and resolved != "ref":
+        body, _ = registry.split_backend(resolved)
+        resolved = body + ("_interpret" if config.interpret else "")
+    if resolved == config.backend and config.interpret is None:
+        return config
+    return dataclasses.replace(config, backend=resolved, interpret=None)
 
 
 def _sven_core(
@@ -175,7 +215,7 @@ def _sven_core(
             rmatvec = lambda v: Xhat.T @ v
         yhat = jnp.concatenate([jnp.ones((p,), dtype), -jnp.ones((p,), dtype)])
         hess_matvec = None
-        if config.backend == "pallas":
+        if config.backend != "xla":
             from repro.kernels.ops import hinge_hessian_matvec
 
             def hess_matvec(v, act, C_traced):  # noqa: F811 — Pallas fused H v
@@ -183,7 +223,8 @@ def _sven_core(
                     X.astype(jnp.float32), y.astype(jnp.float32),
                     jnp.asarray(t, jnp.float32), jnp.asarray(C_traced, jnp.float32),
                     act[:p].astype(jnp.float32), act[p:].astype(jnp.float32),
-                    v.astype(jnp.float32), interpret=config.interpret)
+                    v.astype(jnp.float32), backend=config.backend,
+                    precision=config.precision)
                 return hv.astype(dtype)
 
         res = solve_primal_newton(
@@ -204,12 +245,15 @@ def _sven_core(
     cache = config.cache_kernel
     if cache == "auto":
         cache = "blocks" if m <= config.kernel_cache_max_m else "never"
+    refine = False
     if cache == "blocks":
-        if config.backend == "pallas":
+        if config.backend != "xla":
             from repro.kernels.ops import shifted_gram
             K = shifted_gram(X.astype(jnp.float32), y.astype(jnp.float32),
                              jnp.asarray(t, jnp.float32),
-                             interpret=config.interpret).astype(dtype)
+                             backend=config.backend,
+                             precision=config.precision).astype(dtype)
+            refine = config.precision != "f32"
         elif config.matrix_free:
             K = red.gram_blocks(X, y, t)
         else:
@@ -220,6 +264,15 @@ def _sven_core(
 
     solver = solve_dual_newton if config.solver == "newton" else solve_dual_fista
     res = solver(kernel_matvec, m, C, dtype=dtype, tol=config.tol, alpha0=warm_alpha)
+    if refine:
+        # one step of iterative refinement (DESIGN.md §10.3): the bf16/tf32
+        # kernel bought the O(np^2) Gram pass cheap; re-solving MATRIX-FREE
+        # at full input precision, warm-started from the low-precision
+        # alpha, re-evaluates every Newton residual against exact Gram
+        # statistics at O(np) per iteration and converges in a handful of
+        # steps — restoring <= 1e-10 parity with the full-precision solve.
+        res = solver(op.kernel_matvec, m, C, dtype=dtype, tol=config.tol,
+                     alpha0=res.alpha)
     beta = red.recover_beta(res.alpha, t)
     if keepf is not None:
         beta = beta * keepf

@@ -1,30 +1,39 @@
-"""Pallas TPU kernels for the SVEN hot spots, with pure-jnp oracles.
+"""Pallas kernels for the SVEN hot spots (TPU + GPU/Triton bodies), with
+pure-jnp oracles and a per-backend registry.
 
 Public surface:
 
   - `ops` — the jitted entry points (`shifted_gram`, `hinge_hessian_matvec`,
-    `hinge_stats`): padding/dtype handling, interpret-mode fallback on CPU,
-    and a `use_pallas=False` escape hatch routing to the oracle;
+    `hinge_stats`): backend resolution, tiling/padding/precision handling,
+    and the deprecated `use_pallas=`/`interpret=` shims;
+  - `registry` — the op -> body table and the `backend` enum
+    (`resolve_kernel_backend`, `lookup`, `kernel_backends`);
+  - `autotune` — per-(body, shape-bucket) tile selection with an on-disk
+    winner cache (`tiles_for`, `resolve_tiles`);
   - `ref` — the pure-jnp oracles, the correctness ground truth every kernel
     is parity-tested against (`tests/test_kernels.py`,
-    `tests/test_kernels_surface.py`).
+    `tests/test_kernels_surface.py`, `tests/test_kernels_gpu.py`).
 
-The three ops are re-exported at package level; `core/sven.py` selects them
-via `SvenConfig(backend="pallas")`. Raw kernel bodies (`gram`, `hinge`,
-`hinge_stats` modules) are implementation detail — call through `ops`,
-which owns tiling and padding.
+The ops are re-exported at package level; `core/sven.py` selects them via
+`SvenConfig(backend=...)`. Raw kernel bodies (`gram`, `gram_gpu`, `hinge`,
+`hinge_stats`, `hinge_stats_gpu` modules) are implementation detail — call
+through `ops`, which owns backend lookup, tiling and padding.
 """
-from repro.kernels import ops, ref
+from repro.kernels import autotune, ops, ref, registry
 from repro.kernels.ops import (hinge_hessian_matvec, hinge_stats,
                                resolve_interpret, sharded_shifted_gram,
                                shifted_gram)
+from repro.kernels.registry import resolve_kernel_backend
 
 __all__ = [
     "ops",
     "ref",
+    "registry",
+    "autotune",
     "shifted_gram",
     "sharded_shifted_gram",
     "hinge_hessian_matvec",
     "hinge_stats",
     "resolve_interpret",
+    "resolve_kernel_backend",
 ]

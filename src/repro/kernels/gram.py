@@ -23,7 +23,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _gram_kernel(xi_ref, xj_ref, y_ref, invt_ref, out_ref,
-                 acc_p, acc_a, acc_b, acc_c):
+                 acc_p, acc_a, acc_b, acc_c, *, precision="f32"):
     k = pl.program_id(2)
     nk = pl.num_programs(2)
 
@@ -38,8 +38,14 @@ def _gram_kernel(xi_ref, xj_ref, y_ref, invt_ref, out_ref,
     xj = xj_ref[...].astype(jnp.float32)          # (bk, bn)
     yk = y_ref[...].astype(jnp.float32)           # (bk, 1)
 
+    # "f32" forces full-precision MACs; "bf16"/"tf32" allow the MXU's fast
+    # low-precision passes — accumulation stays f32 either way, and one f32
+    # refinement re-solve on top restores <= 1e-10 parity (DESIGN.md §10.3).
+    prec = (jax.lax.Precision.HIGHEST if precision == "f32"
+            else jax.lax.Precision.DEFAULT)
     acc_p[...] += jax.lax.dot_general(
-        xi, xj, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        xi, xj, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32, precision=prec)
     acc_a[...] += jax.lax.dot_general(
         xi, yk, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
     acc_b[...] += jax.lax.dot_general(
@@ -70,14 +76,17 @@ def gram_pallas_raw(
     bn: int,
     bk: int,
     out_dtype=jnp.float32,
+    precision: str = "f32",
     interpret: bool = False,
 ) -> jax.Array:
     """Unpadded core call. Returns K in block layout (2, 2, p, p)."""
+    import functools
+
     n, p = X.shape
     assert n % bk == 0 and p % bm == 0 and p % bn == 0, (n, p, bm, bn, bk)
     grid = (p // bm, p // bn, n // bk)
     return pl.pallas_call(
-        _gram_kernel,
+        functools.partial(_gram_kernel, precision=precision),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bk, bm), lambda i, j, k: (k, i)),

@@ -1,0 +1,134 @@
+"""Pallas GPU (Triton) kernel: fused shifted-Gram for the SVEN dual.
+
+Same math as the TPU body (kernels/gram.py): one pass over the ORIGINAL
+(n, p) design matrix yields all four (2p)^2 quadrants of K = Zhat^T Zhat
+through the block identity
+
+    K[a,b][i,j] = s_a s_b (X^T X)_ij - s_a u_i - s_b u_j + s,
+    u = X^T y / t,  s = y^T y / t^2,  s_0 = +1, s_1 = -1,
+
+with the rank-1 shift terms accumulated in the same pass and applied in a
+final epilogue. The STRUCTURE is Triton-shaped, not TPU-shaped:
+
+  * grid (p/bm, p/bn) only — each program owns one output tile and runs the
+    k-reduction itself via `fori_loop` + `pl.load` slices (Rgtsvm-style
+    tiled kernel evaluation); there is no sequential grid axis to carry
+    VMEM scratch across, so accumulators live in registers;
+  * the matmul accumulator uses `tl.dot`-shaped `dot_general` with f32
+    `preferred_element_type` (tensor-core path for f16/bf16/tf32 inputs);
+  * the rank-1 statistics accumulate as f32 elementwise-multiply+sum
+    reductions — Triton's `tl.dot` cannot emit N=1 GEMVs, and the VPU-sized
+    work is negligible next to the (bm, bn, bk) MAC tile.
+
+Mixed precision: `precision="bf16"` expects bf16 inputs (storage halved,
+accumulation still f32 — the Rgtsvm reduced-precision-storage recipe);
+`"tf32"` keeps f32 storage but allows tf32 tensor-core MACs
+(`Precision.DEFAULT`); `"f32"` forces full-precision MACs
+(`Precision.HIGHEST`). The <= 1e-10 solver parity gates on top of the
+low-precision paths are restored by one step of f32 iterative refinement
+in `core/sven.py` (DESIGN.md §10.3).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import registry
+
+
+def dot_precision(precision: str) -> jax.lax.Precision:
+    """"f32" -> HIGHEST (full-precision MACs); "tf32"/"bf16" -> DEFAULT
+    (tensor-core MACs; accumulation stays f32 via preferred_element_type)."""
+    return (jax.lax.Precision.HIGHEST if precision == "f32"
+            else jax.lax.Precision.DEFAULT)
+
+
+def _num_warps(bm: int, bn: int) -> int:
+    return max(1, min(8, (bm * bn) // 1024))
+
+
+def _gram_gpu_kernel(xi_ref, xj_ref, y_ref, invt_ref, out_ref, *,
+                     bk: int, precision: str):
+    n = xi_ref.shape[0]
+    bm, bn = xi_ref.shape[1], xj_ref.shape[1]
+    prec = dot_precision(precision)
+
+    # low-precision storage feeds tensor cores directly; anything wider than
+    # f32 (x64-mode callers) is cut to f32 first — accumulation is f32 in
+    # every case, and preferred_element_type may not downcast its operands
+    cdt = (xi_ref.dtype if xi_ref.dtype in (jnp.bfloat16, jnp.float16)
+           else jnp.float32)
+
+    def body(k, carry):
+        acc_p, acc_a, acc_b, acc_c = carry
+        rows = (pl.ds(k * bk, bk), slice(None))
+        xi = pl.load(xi_ref, rows).astype(cdt)         # (bk, bm)
+        xj = pl.load(xj_ref, rows).astype(cdt)         # (bk, bn)
+        yk = pl.load(y_ref, rows).astype(cdt)          # (bk, 1)
+        acc_p = acc_p + jax.lax.dot_general(
+            xi, xj, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32, precision=prec)
+        xif = xi.astype(jnp.float32)
+        xjf = xj.astype(jnp.float32)
+        ykf = yk.astype(jnp.float32)
+        acc_a = acc_a + jnp.sum(xif * ykf, axis=0)     # (bm,)
+        acc_b = acc_b + jnp.sum(xjf * ykf, axis=0)     # (bn,)
+        acc_c = acc_c + jnp.sum(ykf * ykf)
+        return acc_p, acc_a, acc_b, acc_c
+
+    init = (jnp.zeros((bm, bn), jnp.float32), jnp.zeros((bm,), jnp.float32),
+            jnp.zeros((bn,), jnp.float32), jnp.zeros((), jnp.float32))
+    acc_p, acc_a, acc_b, acc_c = jax.lax.fori_loop(0, n // bk, body, init)
+
+    invt = invt_ref[0, 0].astype(jnp.float32)
+    P = acc_p
+    a = (acc_a * invt)[:, None]                        # (bm, 1) over cols
+    b = (acc_b * invt)[None, :]                        # (1, bn) over rows
+    s = acc_c * invt * invt
+    dt = out_ref.dtype
+    out_ref[0, 0] = (P - a - b + s).astype(dt)
+    out_ref[1, 1] = (P + a + b + s).astype(dt)
+    out_ref[0, 1] = (-P - a + b + s).astype(dt)
+    out_ref[1, 0] = (-P + a - b + s).astype(dt)
+
+
+@registry.register("shifted_gram", "gpu")
+def gram_gpu_raw(
+    X: jax.Array,        # (n, p) with n % bk == 0, p % bm == p % bn == 0
+    y2d: jax.Array,      # (n, 1), same dtype family as X
+    invt: jax.Array,     # (1, 1)
+    *,
+    bm: int,
+    bn: int,
+    bk: int,
+    out_dtype=jnp.float32,
+    precision: str = "f32",
+    interpret: bool = False,
+) -> jax.Array:
+    """Unpadded core call. Returns K in block layout (2, 2, p, p)."""
+    from jax.experimental.pallas import triton as plgpu
+
+    n, p = X.shape
+    assert n % bk == 0 and p % bm == 0 and p % bn == 0, (n, p, bm, bn, bk)
+    grid = (p // bm, p // bn)
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = plgpu.TritonCompilerParams(
+            num_warps=_num_warps(bm, bn), num_stages=2)
+    return pl.pallas_call(
+        functools.partial(_gram_gpu_kernel, bk=bk, precision=precision),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, bm), lambda i, j: (0, i)),
+            pl.BlockSpec((n, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((n, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((2, 2, bm, bn), lambda i, j: (0, 0, i, j)),
+        out_shape=jax.ShapeDtypeStruct((2, 2, p, p), out_dtype),
+        interpret=interpret,
+        **kwargs,
+    )(X, X, y2d, invt)  # X twice: row-tile view (xi) and col-tile view (xj)

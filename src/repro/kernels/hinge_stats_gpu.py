@@ -1,0 +1,98 @@
+"""Pallas GPU (Triton) kernel: fused margins + squared-hinge loss +
+dual-gradient — the GPU twin of kernels/hinge_stats.py.
+
+Identical contract to the TPU body (`hinge_stats_raw`): one pass over X
+yields a = X^T w and byw = y.w/t, then the fused epilogue produces margins,
+active set, per-block loss partials and galpha for BOTH halves of the
+implicit SVEN dataset, so none of those round-trip HBM as separate
+elementwise sweeps.
+
+Triton structure (see gram_gpu.py for the rationale): the grid covers only
+the feature tiles (p/bp,); the n-reduction runs inside the program as a
+`fori_loop` over `pl.load` slices with register accumulators — there is no
+sequential grid axis and no TPU VMEM scratch. The reductions here are
+GEMV-shaped, so everything accumulates as f32 elementwise-multiply+sum
+(Triton's `tl.dot` cannot emit N=1 products); the kernel is memory-bound
+and its win is the fusion, not the MACs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import registry
+
+
+def _stats_gpu_kernel(x_ref, w_ref, y_ref, scal_ref,
+                      mt_ref, mb_ref, gt_ref, gb_ref, loss_ref, *, bk: int):
+    n, bp = x_ref.shape
+
+    def body(k, carry):
+        acc_a, acc_byw = carry
+        rows = (pl.ds(k * bk, bk), slice(None))
+        xk = pl.load(x_ref, rows).astype(jnp.float32)   # (bk, bp)
+        wk = pl.load(w_ref, rows).astype(jnp.float32)   # (bk, 1)
+        yk = pl.load(y_ref, rows).astype(jnp.float32)   # (bk, 1)
+        acc_a = acc_a + jnp.sum(xk * wk, axis=0)        # (bp,)
+        acc_byw = acc_byw + jnp.sum(yk * wk)
+        return acc_a, acc_byw
+
+    init = (jnp.zeros((bp,), jnp.float32), jnp.zeros((), jnp.float32))
+    acc_a, acc_byw = jax.lax.fori_loop(0, n // bk, body, init)
+
+    invt = scal_ref[0, 0].astype(jnp.float32)
+    C = scal_ref[1, 0].astype(jnp.float32)
+    a = acc_a[:, None]                                  # (bp, 1)
+    byw = acc_byw * invt
+    o_top = a - byw
+    o_bot = a + byw
+    m_top = o_top                                       # yhat=+1
+    m_bot = -o_bot                                      # yhat=-1
+    act_t = (m_top < 1.0).astype(jnp.float32)
+    act_b = (m_bot < 1.0).astype(jnp.float32)
+    xi_t = act_t * (1.0 - m_top)
+    xi_b = act_b * (1.0 - m_bot)
+    mt_ref[...] = m_top.astype(mt_ref.dtype)
+    mb_ref[...] = m_bot.astype(mb_ref.dtype)
+    gt_ref[...] = (act_t * (o_top - 1.0)).astype(gt_ref.dtype)
+    gb_ref[...] = (act_b * (o_bot + 1.0)).astype(gb_ref.dtype)
+    loss_ref[0, 0] = (C * (jnp.sum(xi_t * xi_t) + jnp.sum(xi_b * xi_b))
+                      ).astype(loss_ref.dtype)
+
+
+@registry.register("hinge_stats", "gpu")
+def hinge_stats_gpu_raw(X, w2d, y2d, scal, *, bp: int, bk: int,
+                        interpret: bool = False):
+    """Same call/return convention as the TPU `hinge_stats_raw`:
+    (mt, mb, gt, gb, loss_partials) with padded shapes (p, 1)×4 and
+    (p // bp, 1)."""
+    from jax.experimental.pallas import triton as plgpu
+
+    n, p = X.shape
+    assert n % bk == 0 and p % bp == 0, (n, p, bp, bk)
+    grid = (p // bp,)
+    out = [jax.ShapeDtypeStruct((p, 1), jnp.float32) for _ in range(4)]
+    out.append(jax.ShapeDtypeStruct((p // bp, 1), jnp.float32))
+    vec = pl.BlockSpec((bp, 1), lambda i: (i, 0))
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = plgpu.TritonCompilerParams(
+            num_warps=4, num_stages=2)
+    return pl.pallas_call(
+        functools.partial(_stats_gpu_kernel, bk=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, bp), lambda i: (0, i)),
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),
+            pl.BlockSpec((2, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[vec, vec, vec, vec,
+                   pl.BlockSpec((1, 1), lambda i: (i, 0))],
+        out_shape=out,
+        interpret=interpret,
+        **kwargs,
+    )(X, w2d, y2d, scal)

@@ -1,51 +1,83 @@
-"""Jitted public wrappers for the Pallas kernels: padding, dtype handling,
-interpret-mode fallback on CPU, and a `use_pallas=False` escape hatch that
-routes to the pure-jnp oracle (ref.py) — used for A/B testing and as the
-path taken for shapes where kernel tiling would be wasteful.
+"""Jitted public wrappers for the kernel bodies: backend resolution through
+the per-backend registry (kernels/registry.py), tile selection through the
+autotuner (kernels/autotune.py), padding, dtype/precision handling, and the
+deprecation shims that keep the old `use_pallas`/`interpret` flags working.
 
-Interpret-mode selection is resolved from the OPERANDS, never from the
-process default backend at trace time: an array committed to a non-default
-device (or living on a `repro.dist` mesh) must run the kernel for ITS
-platform. `resolve_interpret` pins the choice before the jitted core is
-entered; traced callers (`core/sven.py`, the bucket executables) thread an
-explicit choice from `SvenConfig.interpret` instead, which `sven()`/
-`sven_batch()`/the penalized front-end resolve against the concrete inputs
-before tracing (DESIGN.md §9.3).
+One `backend` enum drives everything (DESIGN.md §10): a resolved value from
+`registry.RESOLVED_BACKENDS` names both the kernel body ("tpu" Pallas,
+"gpu" Pallas/Triton, "ref" jnp oracle) and how it executes (compiled vs
+interpret). `None`/"auto" resolves from the OPERANDS' committed devices,
+never from the process default backend at trace time (the §9.3 bugfix);
+traced callers (`core/sven.py`, the bucket executables) thread an explicit
+resolved value from `SvenConfig.backend`, pinned pre-trace by
+`core.sven.resolve_backend`.
+
+Precision (`"f32" | "bf16" | "tf32"`) selects the MAC path of the Gram
+kernel and the storage dtype fed to the fused stats kernels; accumulation
+is f32 in every cell of the matrix (README "Backends & precision"). The
+"ref" body ignores it — the oracle always computes at full input precision.
+
+Tiles: explicit `bm=`/`bn=`/`bk=`/`bp=` kwargs always win; unset tiles come
+from `autotune.tiles_for`, which measures candidates once per (body,
+shape-bucket) on compiled backends and uses static defaults elsewhere.
 """
 from __future__ import annotations
 
+import warnings
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune, registry
 from repro.kernels import gram as _gram
+from repro.kernels import gram_gpu as _gram_gpu          # registers gpu body
 from repro.kernels import hinge as _hinge
 from repro.kernels import hinge_stats as _hs
+from repro.kernels import hinge_stats_gpu as _hs_gpu     # registers gpu body
 from repro.kernels import ref as _ref
+
+PRECISIONS = ("f32", "bf16", "tf32")
+
+# bodies not defined with a @register decorator wire up here, once, at
+# import time (re-import just overwrites the same keys)
+registry.register("shifted_gram", "tpu")(_gram.gram_pallas_raw)
+registry.register("shifted_gram", "ref")(_ref.gram_blocks_ref)
+registry.register("hinge_stats", "tpu")(_hs.hinge_stats_raw)
+registry.register("hinge_stats", "ref")(_ref.hinge_stats_ref)
+registry.register("hinge_xtv", "tpu")(_hinge.hinge_xtv_raw)
+registry.register("hinge_xtv", "ref")(_ref.hinge_xtv_ref)
+registry.register("hinge_xd", "tpu")(_hinge.hinge_xd_raw)
+registry.register("hinge_xd", "ref")(_ref.hinge_xd_ref)
 
 
 def resolve_interpret(interpret, *arrays) -> bool:
-    """Pin the Pallas interpret-mode choice for a kernel launch.
-
-    An explicit `interpret` always wins. With None, the decision comes from
-    the platform(s) the first CONCRETE array operand is committed to — the
-    devices the kernel will actually run on — not from the process default
-    backend (which is wrong for arrays placed on a non-default device, and
-    meaningless inside a trace). Tracers and numpy inputs carry no device,
-    so the process default backend remains the last-resort fallback only.
-    """
+    """Deprecated two-flag-era helper: the interpret bit of the resolved
+    backend. Kept callable because DESIGN.md §9.3 and older call sites name
+    it; new code should use `registry.resolve_kernel_backend`."""
     if interpret is not None:
         return bool(interpret)
-    for a in arrays:
-        if isinstance(a, jax.Array) and not isinstance(a, jax.core.Tracer):
-            try:
-                platforms = {d.platform for d in a.devices()}
-            except Exception:  # noqa: BLE001 — abstract/deleted arrays
-                continue
-            if platforms:
-                return platforms == {"cpu"}
-    return jax.default_backend() == "cpu"
+    return registry.split_backend(
+        registry.resolve_kernel_backend(None, *arrays))[1]
+
+
+def _resolve(backend: Optional[str], use_pallas, interpret, what: str,
+             *arrays) -> str:
+    """Fold the deprecated flags into one RESOLVED backend string."""
+    if use_pallas is not None or interpret is not None:
+        warnings.warn(
+            f"{what}: use_pallas=/interpret= are deprecated — pass "
+            f"backend= (one of {registry.RESOLVED_BACKENDS}, 'auto', or "
+            f"'ref' for the old use_pallas=False)", DeprecationWarning,
+            stacklevel=3)
+    if use_pallas is False:
+        return "ref"
+    resolved = registry.resolve_kernel_backend(backend, *arrays)
+    if interpret is not None and resolved != "ref":
+        body, _ = registry.split_backend(resolved)
+        resolved = body + ("_interpret" if interpret else "")
+    return resolved
 
 
 def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
@@ -58,29 +90,63 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
     return jnp.pad(x, pads)
 
 
+def _next_mult(sz: int, base: int = 128) -> int:
+    """Largest power-of-two-ish tile not exceeding the padded size."""
+    m = base
+    while m > sz:
+        m //= 2
+    return max(m, 8)
+
+
+def _storage(Xp: jax.Array, precision: str) -> jax.Array:
+    """bf16 keeps reduced-precision STORAGE (the Rgtsvm recipe — kernels
+    accumulate f32 regardless); f32/tf32 leave the operand alone."""
+    return Xp.astype(jnp.bfloat16) if precision == "bf16" else Xp
+
+
+def _gram_tiles(backend: str, n: int, p: int, bm, bn, bk,
+                precision: str) -> dict:
+    if bm is not None and bn is not None and bk is not None:
+        return {"bm": bm, "bn": bn, "bk": bk}
+    dtype = jnp.bfloat16 if precision == "bf16" else jnp.float32
+    tiles = autotune.tiles_for("shifted_gram", backend, n, p, dtype)
+    for k, v in (("bm", bm), ("bn", bn), ("bk", bk)):
+        if v is not None:
+            tiles[k] = v
+    return tiles
+
+
+# -- shifted Gram -----------------------------------------------------------
+
 def shifted_gram(
     X: jax.Array,
     y: jax.Array,
     t: jax.Array | float,
     *,
-    bm: int = 128,
-    bn: int = 128,
-    bk: int = 128,
+    bm: Optional[int] = None,
+    bn: Optional[int] = None,
+    bk: Optional[int] = None,
     flatten: bool = True,
-    use_pallas: bool = True,
-    interpret: bool | None = None,
+    backend: Optional[str] = None,
+    precision: str = "f32",
+    use_pallas: Optional[bool] = None,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     """K = Zhat^T Zhat of the SVEN dual, as (2p, 2p) (flatten) or (2,2,p,p).
 
-    `interpret=None` resolves against X's committed devices (see
-    `resolve_interpret`); traced call sites must pass an explicit choice.
+    `backend=None`/"auto" resolves against X's committed devices (see
+    `registry.resolve_kernel_backend`); traced call sites must pass an
+    explicit resolved value. `use_pallas=`/`interpret=` are the deprecated
+    two-flag spelling.
     """
-    return _shifted_gram_jit(X, y, t, bm=bm, bn=bn, bk=bk, flatten=flatten,
-                             use_pallas=use_pallas,
-                             interpret=resolve_interpret(interpret, X, y))
+    resolved = _resolve(backend, use_pallas, interpret, "shifted_gram", X, y)
+    tiles = _gram_tiles(resolved, *X.shape, bm, bn, bk, precision)
+    return _shifted_gram_jit(X, y, t, flatten=flatten, backend=resolved,
+                             precision=precision, **tiles)
 
 
-@partial(jax.jit, static_argnames=("bm", "bn", "bk", "flatten", "use_pallas", "interpret"))
+@partial(jax.jit, static_argnames=("bm", "bn", "bk", "flatten", "backend",
+                                   "precision"))
 def _shifted_gram_jit(
     X: jax.Array,
     y: jax.Array,
@@ -90,21 +156,24 @@ def _shifted_gram_jit(
     bn: int,
     bk: int,
     flatten: bool,
-    use_pallas: bool,
-    interpret: bool,
+    backend: str,
+    precision: str,
 ) -> jax.Array:
     n, p = X.shape
-    if not use_pallas:
+    impl, body, interp = registry.lookup("shifted_gram", backend)
+    if body == "ref":
         Kb = _ref.gram_blocks_ref(X, y, t)
         return _ref.flatten_gram(Kb) if flatten else Kb
-    interp = interpret
-    Xp = _pad_to(_pad_to(X, 0, bk), 1, max(bm, bn))
-    y2d = _pad_to(y[:, None], 0, bk).astype(X.dtype)
+    Xp = _storage(_pad_to(_pad_to(X, 0, bk), 1, max(bm, bn)), precision)
+    y2d = _storage(_pad_to(y[:, None], 0, bk).astype(X.dtype), precision)
     invt = (1.0 / jnp.asarray(t, jnp.float32)).reshape(1, 1)
-    Kb = _gram.gram_pallas_raw(Xp, y2d, invt, bm=bm, bn=bn, bk=bk, interpret=interp)
+    Kb = impl(Xp, y2d, invt, bm=bm, bn=bn, bk=bk, precision=precision,
+              interpret=interp)
     Kb = Kb[:, :, :p, :p]
     return _ref.flatten_gram(Kb) if flatten else Kb
 
+
+# -- hinge Hessian mat-vec --------------------------------------------------
 
 def hinge_hessian_matvec(
     X: jax.Array,
@@ -118,20 +187,25 @@ def hinge_hessian_matvec(
     bp: int = 512,
     bn: int = 512,
     bk: int = 512,
-    use_pallas: bool = True,
-    interpret: bool | None = None,
+    backend: Optional[str] = None,
+    precision: str = "f32",
+    use_pallas: Optional[bool] = None,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     """H v = v + 2C Xhat^T(act . (Xhat v)) via two fused GEMV passes.
 
-    `interpret=None` resolves against X's committed devices (see
-    `resolve_interpret`); traced call sites must pass an explicit choice.
+    Only the TPU body exists — the op is GEMV-shaped and memory-bound, so
+    on GPU the registry serves the "ref" oracle (XLA/cuBLAS is the honest
+    choice there; see README "Backends & precision").
     """
+    resolved = _resolve(backend, use_pallas, interpret,
+                        "hinge_hessian_matvec", X, v)
     return _hinge_hessian_matvec_jit(
         X, y, t, C, act_top, act_bot, v, bp=bp, bn=bn, bk=bk,
-        use_pallas=use_pallas, interpret=resolve_interpret(interpret, X, v))
+        backend=resolved, precision=precision)
 
 
-@partial(jax.jit, static_argnames=("bp", "bn", "bk", "use_pallas", "interpret"))
+@partial(jax.jit, static_argnames=("bp", "bn", "bk", "backend", "precision"))
 def _hinge_hessian_matvec_jit(
     X: jax.Array,
     y: jax.Array,
@@ -144,38 +218,41 @@ def _hinge_hessian_matvec_jit(
     bp: int,
     bn: int,
     bk: int,
-    use_pallas: bool,
-    interpret: bool,
+    backend: str,
+    precision: str,
 ) -> jax.Array:
-    if not use_pallas:
+    impl_xtv, body, interp = registry.lookup("hinge_xtv", backend)
+    if body == "ref":
         return _ref.hessian_matvec_ref(X, y, t, C, act_top, act_bot, v)
-    interp = interpret
+    impl_xd, _, _ = registry.lookup("hinge_xd", backend)
     n, p = X.shape
     bp_ = min(bp, _next_mult(p))
     bk1 = min(bk, _next_mult(n))
-    Xp1 = _pad_to(_pad_to(X, 0, bk1), 1, bp_)
+    Xp1 = _storage(_pad_to(_pad_to(X, 0, bk1), 1, bp_), precision)
     v2d = _pad_to(v[:, None], 0, bk1).astype(jnp.float32)
     y2d = _pad_to(y[:, None], 0, bk1).astype(jnp.float32)
     at2d = _pad_to(act_top[:, None].astype(jnp.float32), 0, bp_)
     ab2d = _pad_to(act_bot[:, None].astype(jnp.float32), 0, bp_)
     invt = (1.0 / jnp.asarray(t, jnp.float32)).reshape(1, 1)
-    d2d, e_part = _hinge.hinge_xtv_raw(Xp1, v2d, y2d, at2d, ab2d, invt,
-                                       bp=bp_, bk=bk1, interpret=interp)
+    d2d, e_part = impl_xtv(Xp1, v2d, y2d, at2d, ab2d, invt,
+                           bp=bp_, bk=bk1, interpret=interp)
     e = jnp.sum(e_part)
 
     bn_ = min(bn, _next_mult(n))
     bk2 = min(bk, _next_mult(p))
-    Xp2 = _pad_to(_pad_to(X, 0, bn_), 1, bk2)
+    Xp2 = _storage(_pad_to(_pad_to(X, 0, bn_), 1, bk2), precision)
     d2d = _pad_to(d2d[: p], 0, bk2)
     y2d2 = _pad_to(y[:, None], 0, bn_).astype(jnp.float32)
     v2d2 = _pad_to(v[:, None], 0, bn_).astype(jnp.float32)
     scal = jnp.stack([1.0 / jnp.asarray(t, jnp.float32),
                       e.astype(jnp.float32),
                       2.0 * jnp.asarray(C, jnp.float32)]).reshape(3, 1)
-    hv = _hinge.hinge_xd_raw(Xp2, d2d, y2d2, v2d2, scal, bn=bn_, bk=bk2,
-                             interpret=interp)
+    hv = impl_xd(Xp2, d2d, y2d2, v2d2, scal, bn=bn_, bk=bk2,
+                 interpret=interp)
     return hv[:n, 0].astype(v.dtype)
 
+
+# -- fused Newton outer-step stats ------------------------------------------
 
 def hinge_stats(
     X: jax.Array,
@@ -184,22 +261,28 @@ def hinge_stats(
     w: jax.Array,
     C: jax.Array | float,
     *,
-    bp: int = 512,
-    bk: int = 512,
-    use_pallas: bool = True,
-    interpret: bool | None = None,
+    bp: Optional[int] = None,
+    bk: Optional[int] = None,
+    backend: Optional[str] = None,
+    precision: str = "f32",
+    use_pallas: Optional[bool] = None,
+    interpret: Optional[bool] = None,
 ):
     """Fused Newton outer-step stats: (margin (2p,), act (2p,), loss, galpha).
 
-    `interpret=None` resolves against X's committed devices (see
-    `resolve_interpret`); traced call sites must pass an explicit choice.
+    Served by the TPU body, the GPU (Triton) body, or the ref oracle per
+    the resolved backend; the deprecated flags shim as in `shifted_gram`.
     """
-    return _hinge_stats_jit(X, y, t, w, C, bp=bp, bk=bk,
-                            use_pallas=use_pallas,
-                            interpret=resolve_interpret(interpret, X, w))
+    resolved = _resolve(backend, use_pallas, interpret, "hinge_stats", X, w)
+    if bp is None or bk is None:
+        tiles = autotune.tiles_for("hinge_stats", resolved, *X.shape)
+        bp = bp if bp is not None else tiles["bp"]
+        bk = bk if bk is not None else tiles["bk"]
+    return _hinge_stats_jit(X, y, t, w, C, bp=bp, bk=bk, backend=resolved,
+                            precision=precision)
 
 
-@partial(jax.jit, static_argnames=("bp", "bk", "use_pallas", "interpret"))
+@partial(jax.jit, static_argnames=("bp", "bk", "backend", "precision"))
 def _hinge_stats_jit(
     X: jax.Array,
     y: jax.Array,
@@ -209,22 +292,22 @@ def _hinge_stats_jit(
     *,
     bp: int,
     bk: int,
-    use_pallas: bool,
-    interpret: bool,
+    backend: str,
+    precision: str,
 ):
-    if not use_pallas:
+    impl, body, interp = registry.lookup("hinge_stats", backend)
+    if body == "ref":
         return _ref.hinge_stats_ref(X, y, t, w, C)
-    interp = interpret
     n, p = X.shape
     bp_ = min(bp, _next_mult(p))
     bk_ = min(bk, _next_mult(n))
-    Xp = _pad_to(_pad_to(X, 0, bk_), 1, bp_)
+    Xp = _storage(_pad_to(_pad_to(X, 0, bk_), 1, bp_), precision)
     w2d = _pad_to(w[:, None], 0, bk_).astype(jnp.float32)
     y2d = _pad_to(y[:, None], 0, bk_).astype(jnp.float32)
     scal = jnp.stack([1.0 / jnp.asarray(t, jnp.float32),
                       jnp.asarray(C, jnp.float32)]).reshape(2, 1)
-    mt, mb, gt, gb, lp = _hs.hinge_stats_raw(Xp, w2d, y2d, scal,
-                                             bp=bp_, bk=bk_, interpret=interp)
+    mt, mb, gt, gb, lp = impl(Xp, w2d, y2d, scal, bp=bp_, bk=bk_,
+                              interpret=interp)
     # padded feature columns produce margin 1-eps... no: padded cols give a=0,
     # o=-+byw; slice them off before assembling
     margin = jnp.concatenate([mt[:p, 0], mb[:p, 0]]).astype(w.dtype)
@@ -241,13 +324,7 @@ def _hinge_stats_jit(
     return margin, act, loss.astype(w.dtype), galpha
 
 
-def _next_mult(sz: int, base: int = 128) -> int:
-    """Largest power-of-two-ish tile not exceeding the padded size."""
-    m = base
-    while m > sz:
-        m //= 2
-    return max(m, 8)
-
+# -- sharded Gram -----------------------------------------------------------
 
 def sharded_shifted_gram(
     mesh,
@@ -255,32 +332,37 @@ def sharded_shifted_gram(
     y: jax.Array,
     t: jax.Array | float,
     *,
-    bm: int = 128,
-    bn: int = 128,
-    bk: int = 128,
-    use_pallas: bool = True,
-    interpret: bool | None = None,
+    bm: Optional[int] = None,
+    bn: Optional[int] = None,
+    bk: Optional[int] = None,
+    backend: Optional[str] = None,
+    precision: str = "f32",
+    use_pallas: Optional[bool] = None,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     """K = Zhat^T Zhat with the ROWS of X sharded over `mesh` (DESIGN.md §9).
 
-    Each device runs the block-gram kernel (Pallas, or the jnp oracle with
-    `use_pallas=False`) on its local row shard and ONE psum over the
-    flattened mesh assembles the full (2p, 2p) kernel: the quadrant identity
-    is linear in the per-shard statistics (G, u, s), so partial block-grams
-    sum exactly. Interpret mode is pinned OUTSIDE the shard_map region —
-    inside it the process default backend is unrelated to the kernel's
-    actual placement, which is precisely why trace-time sniffing was a bug.
+    Each device runs the block-gram kernel for the RESOLVED backend on its
+    local row shard and ONE psum over the flattened mesh assembles the full
+    (2p, 2p) kernel: the quadrant identity is linear in the per-shard
+    statistics (G, u, s), so partial block-grams sum exactly. The backend is
+    resolved OUTSIDE the shard_map region — inside it the process default
+    backend is unrelated to the kernel's actual placement, which is
+    precisely why trace-time sniffing was a bug.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
     axes = tuple(mesh.axis_names)
-    interp = resolve_interpret(interpret, X, y)
+    resolved = _resolve(backend, use_pallas, interpret,
+                        "sharded_shifted_gram", X, y)
+    n_loc = X.shape[0] // mesh.size
+    tiles = _gram_tiles(resolved, n_loc, X.shape[1], bm, bn, bk, precision)
 
     def local(X_loc, y_loc, t_op):
-        Kb = _shifted_gram_jit(X_loc, y_loc, t_op, bm=bm, bn=bn, bk=bk,
-                               flatten=True, use_pallas=use_pallas,
-                               interpret=interp)
+        Kb = _shifted_gram_jit(X_loc, y_loc, t_op, flatten=True,
+                               backend=resolved, precision=precision,
+                               **tiles)
         return jax.lax.psum(Kb, axes)
 
     fn = shard_map(local, mesh=mesh, in_specs=(P(axes, None), P(axes), P()),

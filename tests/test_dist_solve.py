@@ -58,14 +58,27 @@ def test_resolve_interpret_from_committed_device():
         jax.default_backend() == "cpu")
 
 
-def test_resolve_backend_pins_interpret_into_config():
+def test_resolve_backend_pins_enum_into_config():
     X, y, _ = make_regression(24, 10, seed=0)
-    cfg = SvenConfig(backend="pallas")
+    cfg = SvenConfig(backend="pallas")      # deprecated alias of "auto"
     assert cfg.interpret is None
     resolved = resolve_backend(cfg, X, y)
-    assert resolved.interpret is True          # CPU-committed operands
-    # xla configs are untouched (interpret is irrelevant there)
-    assert resolve_backend(SvenConfig(), X, y).interpret is None
+    # CPU-committed operands -> the TPU body under interpret mode, as ONE
+    # resolved enum value; the legacy interpret field is normalized away
+    assert resolved.backend == "tpu_interpret"
+    assert resolved.interpret is None
+    assert resolve_backend(SvenConfig(backend="auto"), X, y) == resolved
+    # the deprecated interpret flag folds into the enum, not a second field
+    folded = resolve_backend(SvenConfig(backend="pallas", interpret=True),
+                             X, y)
+    assert folded == resolved
+    # xla configs are untouched (identity object: resolve_path_config
+    # depends on the no-op returning the SAME config)
+    plain = SvenConfig()
+    assert resolve_backend(plain, X, y) is plain
+    # already-resolved configs are identity too
+    pinned = SvenConfig(backend="gpu_interpret")
+    assert resolve_backend(pinned, X, y) is pinned
 
 
 def test_sven_pallas_threading_no_retrace_and_parity():
