@@ -112,6 +112,104 @@ def run(requests: int = 48, concurrency: int = 8, reps: int = 3) -> dict:
     return result
 
 
+def run_multihost(requests: int = 24, hosts: int = 2,
+                  max_batch: int = 4) -> dict:
+    """p99 under multi-process load with one injected host kill — the
+    ``multihost`` section of BENCH_path.json (DESIGN.md §11).
+
+    Three waves of the same seeded single-bucket stream on one
+    `MultiHostCoordinator` over `hosts` worker processes sharing a
+    persistent spill tier: warmup (every host compiles the one bucket
+    executable), a measured no-fault wave, then a measured wave with one
+    host SIGKILLed mid-stream while it holds in-flight batches. Gates
+    (validate_artifact): every admitted request of every wave reaches a
+    terminal result with zero losses, the fault wave's p99 stays within 3x
+    the no-fault p99 (failover cost is re-solving the dead host's work,
+    never recompiling — the survivor compiled at warmup and warm-starts
+    from the shared spill), and solutions stay <= 1e-10 of direct solves.
+    """
+    import tempfile
+
+    from repro.runtime.multihost import MultiHostCoordinator
+
+    # one bucket shape: every host's single executable is compiled by the
+    # warmup wave, so the kill never pays a compile on the survivor and the
+    # p99 ratio measures pure failover cost
+    spec = LoadSpec(n_requests=requests, n_datasets=2,
+                    shapes=((48, 24), (48, 24)), penalized_fraction=0.0,
+                    pattern="adjacent", seed=11)
+    workload = make_workload(spec)
+    statuses: dict = {}
+    lost = 0
+    with tempfile.TemporaryDirectory() as tmp:
+        coord = MultiHostCoordinator(n_hosts=hosts, max_batch=max_batch,
+                                     cache_dir=tmp)
+        try:
+            for out in (run_open_loop(coord, workload),      # warmup/compile
+                        run_open_loop(coord, workload)):     # measured
+                lost += len(set(out["ids"]) - set(out["results"]))
+            p99_nofault = out["p99_latency_s"]
+
+            # fault wave: submit half, flush so the doomed host holds
+            # in-flight batches, SIGKILL it, keep submitting — detection,
+            # requeue and re-solve all land inside the measured window
+            coord.metrics.reset()
+            kill_at = len(workload) // 2
+            ids = []
+            for i, item in enumerate(workload):
+                if i == kill_at:
+                    coord.flush()
+                    coord.kill_host(0)
+                ids.append(coord.submit(item.X, item.y, t=item.lam,
+                                        lambda2=item.lambda2,
+                                        priority=item.priority))
+            results = coord.drain()
+            summary = coord.metrics.summary()
+            p99_fault = summary["p99_latency_s"]
+            lost += len(set(ids) - set(results))
+            for res in results.values():
+                statuses[res.status] = statuses.get(res.status, 0) + 1
+
+            max_dev = 0.0
+            for item, rid in list(zip(workload, ids))[:8]:
+                if results[rid].status != "ok":
+                    continue
+                direct = sven(item.X, item.y, item.lam, item.lambda2).beta
+                max_dev = max(max_dev, float(jnp.abs(
+                    jnp.asarray(results[rid].beta) - direct).max()))
+            hosts_lost = coord.hosts_lost
+            requeued = coord.requeued_batches
+        finally:
+            worker_stats = coord.shutdown()
+
+    ratio = p99_fault / max(p99_nofault, 1e-9)
+    spill_hits = sum(s.get("spill_hits", 0) for s in worker_stats)
+    result = {
+        "n_requests": requests,
+        "hosts": hosts,
+        "max_batch": max_batch,
+        "p99_nofault_s": p99_nofault,
+        "p99_fault_s": p99_fault,
+        "fault_over_nofault_p99": ratio,
+        "hosts_lost": hosts_lost,
+        "requeued_batches": requeued,
+        "statuses": statuses,
+        "lost_requests": lost,
+        "all_accounted": lost == 0,
+        "spill_hits": spill_hits,
+        "max_dev_vs_direct": max_dev,
+        "multihost_ok": (lost == 0 and hosts_lost == 1 and ratio <= 3.0
+                         and statuses.get("ok", 0) == requests
+                         and max_dev <= 1e-10),
+    }
+    emit("serve_multihost_fault_p99", p99_fault,
+         f"hosts={hosts} kill=1 p99_nofault={p99_nofault*1e3:.1f}ms "
+         f"ratio={ratio:.2f}x requeued={requeued} "
+         f"statuses={statuses} max_dev={max_dev:.2e}")
+    return result
+
+
 if __name__ == "__main__":
     reset_trace_counts()
     print(run())
+    print(run_multihost())

@@ -40,6 +40,8 @@ def main() -> None:
         "cv": (lambda: bench_cv.run(k=4, n_lambdas=8)) if args.quick else bench_cv.run,
         "serve": ((lambda: bench_serve.run(requests=24, reps=2))
                   if args.quick else bench_serve.run),
+        "multihost": ((lambda: bench_serve.run_multihost(requests=16))
+                      if args.quick else bench_serve.run_multihost),
         "dist_solve": ((lambda: bench_dist_solve.run(n=384, p=32, reps=2))
                        if args.quick else bench_dist_solve.run),
         "kernels": ((lambda: bench_kernels.run(n=384, p=32, reps=2))
@@ -59,7 +61,7 @@ def main() -> None:
         try:
             out = mods[name]()
             if (name in ("path", "batch", "cv", "serve", "dist_solve",
-                         "kernels")
+                         "kernels", "multihost")
                     and isinstance(out, dict)):
                 artifact[name] = out
         except Exception:  # noqa: BLE001

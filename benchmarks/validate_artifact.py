@@ -63,6 +63,12 @@ REQUIRED_KEYS = {
         "hinge_parity_rel", "unfused_parity_rel", "bf16_refined_max_dev",
         "gpu_speedup", "parity_ok", "speedup_ok", "kernels_ok",
     },
+    "multihost": {
+        "n_requests", "hosts", "max_batch", "p99_nofault_s", "p99_fault_s",
+        "fault_over_nofault_p99", "hosts_lost", "requeued_batches",
+        "statuses", "lost_requests", "all_accounted", "spill_hits",
+        "max_dev_vs_direct", "multihost_ok",
+    },
 }
 
 
@@ -127,6 +133,18 @@ def validate(artifact: dict) -> list:
           "path slower than single-device (the PR 5 always-shard 0.10x "
           "class) — routed_speedup must be >= 1.0, or >= 0.8 with the "
           "router on the bit-identical single path")
+    mh = artifact.get("multihost", {})
+    check("multihost", mh.get("all_accounted") is True,
+          "a host kill lost admitted requests — every request must end in "
+          "a terminal result")
+    check("multihost", mh.get("hosts_lost") == 1,
+          "the injected SIGKILL was not detected as exactly one dead host")
+    check("multihost", mh.get("fault_over_nofault_p99", 99.0) <= 3.0,
+          "p99 with one host killed mid-stream exceeded 3x the no-fault p99")
+    check("multihost", mh.get("max_dev_vs_direct", 1.0) <= 1e-10,
+          "multi-host solves diverged from direct sven() beyond 1e-10")
+    check("multihost", mh.get("multihost_ok") is True,
+          "multihost section gate failed")
     kernels = artifact.get("kernels", {})
     check("kernels", kernels.get("parity_ok") is True,
           "a Pallas kernel body diverged from the ref oracle beyond f32 "
@@ -156,6 +174,12 @@ def main() -> None:
                  f"(max dev {ds['max_dev_sharded_solve']:.1e}, "
                  f"routed->{ds['routed_path']} "
                  f"{ds['routed_speedup']:.2f}x)" if ds else "")
+    mh = artifact.get("multihost")
+    if mh:
+        dist_note += (f", multihost fault p99 "
+                      f"{mh['fault_over_nofault_p99']:.2f}x no-fault "
+                      f"({mh['hosts']} hosts, {mh['requeued_batches']} "
+                      f"requeued)")
     kn = artifact.get("kernels")
     if kn:
         spd = (f", gpu {kn['gpu_speedup']:.2f}x"

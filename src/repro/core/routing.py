@@ -433,6 +433,28 @@ def route_batch(n: int, p: int, batch_size: int, mesh: Optional[Mesh] = None,
     return _DECISIONS[key]
 
 
+def estimate_batch_seconds(n: int, p: int, batch_size: int, *,
+                           form: str = "constrained") -> float:
+    """Modeled single-host seconds for a stacked B-problem (n, p) solve.
+
+    The multi-host coordinator's placement signal: it needs RELATIVE prices
+    (a (256, 128) x 8 batch must cost more than a (32, 16) x 2 one), not
+    wall-clock accuracy, and it must never trigger a calibration
+    microbenchmark on the admission path. So this prices the "single"
+    layout with whatever calibration is already known — the in-process
+    cache, then the disk cache, then the shape-only default — and never
+    measures.
+    """
+    backend = jax.default_backend()
+    cal = (_CALIBRATIONS.get((backend, 1))
+           or _load_disk_calibration(backend, 1) or _SINGLE_DEVICE)
+    from repro.core.sven import SvenConfig, _pick_mode
+
+    mode = _pick_mode(n, p, SvenConfig())
+    pts = PENALIZED_EVALS if form == "penalized" else 1
+    return _batch_costs(n, p, batch_size, mode, cal, pts)["single"]
+
+
 def sven_routed(X, y, t, lambda2, config=None, *, mesh: Optional[Mesh] = None,
                 route: str = "auto", warm_alpha=None, warm_w=None):
     """`sven` with automatic layout choice — THE multi-device entry point.

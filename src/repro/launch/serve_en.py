@@ -45,12 +45,25 @@ def run(argv=None):
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--max-wait", type=float, default=2e-3,
                     help="coalescing window (s) before a deadline launch")
+    ap.add_argument("--cache-dir", type=str, default=None,
+                    help="persistent warm-start spill directory: solutions "
+                         "survive restarts and are shareable across hosts "
+                         "(DESIGN.md §11.2)")
+    ap.add_argument("--speculate", action="store_true",
+                    help="pre-solve predicted next lambda-crawl points in "
+                         "idle batch slots (DESIGN.md §11.3)")
     args = ap.parse_args(argv)
 
     cfg = SvenConfig()
     total = args.requests + args.penalized
+    cache = "default"
+    if args.cache_dir is not None:
+        from repro.runtime import TieredSolutionCache
+
+        cache = TieredSolutionCache(spill_dir=args.cache_dir)
     sched = ContinuousScheduler(cfg, max_batch=args.max_batch,
-                                max_wait=args.max_wait)
+                                max_wait=args.max_wait, cache=cache,
+                                speculate=args.speculate)
     reference = ElasticNetEngine(cfg, max_batch=args.max_batch, cache=None)
 
     new_execs_last_wave = 0

@@ -10,10 +10,12 @@ adjacent-lambda observation (`cache`), rank-1 streaming-row updates
 reproducible open-loop load generator (`loadgen` — also the CI serving
 smoke: ``python -m repro.runtime.loadgen``).
 """
-from repro.runtime.cache import (CONSTRAINED, PENALIZED, SolutionCache,
+from repro.runtime.cache import (CONSTRAINED, PENALIZED, PersistentCacheTier,
+                                 SolutionCache, TieredSolutionCache,
                                  WarmEntry, fingerprint_problem)
 from repro.runtime.loadgen import LoadItem, LoadSpec, make_workload, run_open_loop
 from repro.runtime.metrics import LatencyRecorder, percentile
+from repro.runtime.multihost import MultiHostCoordinator
 from repro.runtime.online import OnlineElasticNet, OnlineSolution, OnlineStats
 from repro.runtime.scheduler import (ContinuousScheduler, EnRequest, EnResult,
                                      RuntimeStats, ceil_pow2)
@@ -25,6 +27,9 @@ __all__ = [
     "RuntimeStats",
     "ceil_pow2",
     "SolutionCache",
+    "TieredSolutionCache",
+    "PersistentCacheTier",
+    "MultiHostCoordinator",
     "WarmEntry",
     "fingerprint_problem",
     "CONSTRAINED",

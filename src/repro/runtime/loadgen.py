@@ -133,6 +133,56 @@ def run_open_loop(scheduler, workload: Sequence[LoadItem], *,
     return out
 
 
+def run_multihost(args) -> None:
+    """Multi-process serving smoke (`--hosts N`): the same seeded waves
+    played into a `MultiHostCoordinator` spanning N worker processes, with
+    an optional mid-stream host kill (`--kill-host`). Asserts the
+    cross-process no-silent-drops contract — every submitted request gets a
+    terminal result, and with no injected fault every status is "ok" — plus
+    cross-host warm-start hits through the shared spill tier. (The
+    zero-retrace assertion is per-process; each worker holds its own
+    executables, so the single-process smoke keeps owning that gate.)"""
+    import tempfile
+
+    from repro.runtime.multihost import MultiHostCoordinator
+
+    spec = LoadSpec(n_requests=args.requests,
+                    penalized_fraction=args.penalized, seed=args.seed)
+    workload = make_workload(spec)
+    with tempfile.TemporaryDirectory() as tmp:
+        coord = MultiHostCoordinator(n_hosts=args.hosts,
+                                     max_batch=args.max_batch,
+                                     cache_dir=tmp, speculate=True)
+        try:
+            for wave in range(args.waves):
+                if args.kill_host >= 0 and wave == 1:
+                    coord.kill_host(args.kill_host)
+                    print(f"[loadgen] wave {wave}: injected SIGKILL on "
+                          f"host {args.kill_host}")
+                summary = run_open_loop(coord, workload)
+                statuses: dict = {}
+                for res in summary["results"].values():
+                    statuses[res.status] = statuses.get(res.status, 0) + 1
+                print(f"[loadgen] wave {wave}: {summary['n_completed']}/"
+                      f"{args.requests} done in "
+                      f"{summary['wall_seconds']*1e3:7.1f} ms"
+                      f" | p99 {summary['p99_latency_s']*1e3:6.1f} ms"
+                      f" | statuses={statuses}"
+                      f" hosts_lost={coord.hosts_lost}")
+                assert set(summary["results"]) == set(summary["ids"]), \
+                    "lost requests across hosts"
+                if args.kill_host < 0:
+                    assert statuses == {"ok": args.requests}, statuses
+        finally:
+            stats = coord.shutdown()
+        hits = sum(s["cache_hits"] for s in stats)
+        spill = sum(s["spill_hits"] for s in stats)
+        print(f"[loadgen] multihost OK: {args.hosts} hosts, "
+              f"{coord.hosts_lost} lost, {coord.requeued_batches} batches "
+              f"requeued, {hits} warm hits ({spill} via shared spill).")
+        assert hits > 0, "multihost waves produced no warm-start hits"
+
+
 def main(argv=None) -> None:
     """CI serving smoke: steady-state waves must not retrace or recompile."""
     import argparse
@@ -151,7 +201,16 @@ def main(argv=None) -> None:
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--penalized", type=float, default=0.25,
                     help="fraction of glmnet-form requests")
+    ap.add_argument("--hosts", type=int, default=0,
+                    help="> 0: drive a MultiHostCoordinator over this many "
+                         "worker processes instead of an in-process scheduler")
+    ap.add_argument("--kill-host", type=int, default=-1,
+                    help="with --hosts: SIGKILL this host before wave 1")
     args = ap.parse_args(argv)
+
+    if args.hosts > 0:
+        run_multihost(args)
+        return
 
     # fixed_batch pins one executable per (bucket, form); repeating the SAME
     # seeded wave makes the steady-state zero-retrace assertion exact (launch

@@ -35,6 +35,7 @@ suggests.
 """
 from __future__ import annotations
 
+import collections
 import contextlib
 import dataclasses
 import heapq
@@ -85,14 +86,17 @@ class EnResult(NamedTuple):
     `status` is "ok" for a solved request; "deadline_exceeded" marks a
     request whose deadline had already passed when a failure-recovery
     requeue re-examined it — those complete WITHOUT a solve (beta is None)
-    instead of looping through the bucket ladder forever.
+    instead of looping through the bucket ladder forever. The multi-host
+    coordinator adds one more terminal status: "aborted", for requests
+    still unserved when every worker host has died (runtime/multihost.py).
+    Every admitted request ends in exactly one of these — never silence.
     """
 
     beta: jax.Array           # (p,) — None when status != "ok"
     iters: jax.Array          # solver iterations spent (padded problem)
     kkt: jax.Array            # EN KKT violation of the padded problem
     bucket: tuple             # (n_bucket, p_bucket) executable this ran on
-    status: str = "ok"        # "ok" | "deadline_exceeded"
+    status: str = "ok"        # "ok" | "deadline_exceeded" | "aborted"
 
 
 @dataclasses.dataclass
@@ -107,6 +111,7 @@ class RuntimeStats:
     launched_full: int = 0    # launches because a bucket filled
     launched_deadline: int = 0  # launches because a deadline expired
     launched_flush: int = 0   # launches forced by flush()/drain()
+    speculative_slots: int = 0  # padding slots repurposed as pre-solves
     # (cache hit/miss counters live on SolutionCache itself — one owner)
 
 
@@ -141,6 +146,8 @@ class _InFlight(NamedTuple):
     w: jax.Array              # (B, bn)
     t_out: jax.Array          # (B,) |beta|_1 (penalized) or request t
     nu_out: jax.Array         # (B,) measured multiplier (penalized only)
+    spec: tuple = ()          # ((slot, fingerprint, lam, lambda2), ...)
+    #                           speculative pre-solves riding padding slots
 
 
 def _urgency(req: EnRequest) -> tuple:
@@ -176,7 +183,7 @@ class ContinuousScheduler:
                  max_wait: Optional[float] = 0.01,
                  cache="default", fixed_batch: bool = False,
                  auto_launch_full: bool = True, mesh="auto",
-                 route: str = "auto",
+                 route: str = "auto", speculate: bool = False,
                  clock=time.perf_counter, dtype=jnp.float64):
         if max_batch < 1 or min_n < 1 or min_p < 1:
             raise ValueError(f"ContinuousScheduler: max_batch/min_n/min_p "
@@ -207,6 +214,15 @@ class ContinuousScheduler:
         self.route = route
         self.fixed_batch = fixed_batch
         self.auto_launch_full = auto_launch_full
+        # speculate=True repurposes a launch's PADDING slots as pre-solves:
+        # when a client is crawling a lambda path (two distinct recent
+        # points on one fingerprint), the geometric continuation of the
+        # crawl is solved in a slot that would otherwise hold an all-zero
+        # dummy, and the solution lands in the warm-start cache BEFORE the
+        # client asks for it (DESIGN.md §11.3). Executable shapes are
+        # untouched — speculation changes slot contents, never geometry —
+        # so the zero-retrace steady-state contract holds with it on.
+        self.speculate = speculate and cache is not None
         self.clock = clock
         self.dtype = dtype
         self.stats = RuntimeStats()
@@ -217,6 +233,9 @@ class ContinuousScheduler:
         self._results: Dict[int, EnResult] = {}
         self._next_id = 0
         self._seen_shapes: set = set()
+        # (fingerprint, form, lambda2) -> (prev_lam, last_lam): the crawl
+        # trail speculation extrapolates; bounded, oldest trail dropped.
+        self._lam_trail: "collections.OrderedDict" = collections.OrderedDict()
 
     # -- admission ---------------------------------------------------------
 
@@ -263,8 +282,20 @@ class ContinuousScheduler:
         heapq.heappush(self._deadlines, (deadline, req.req_id, key))
         self.stats.requests += 1
         self.metrics.submitted(req.req_id, now)
+        if self.speculate and req.fingerprint is not None:
+            self._note_crawl(req)
         self.poll(now)
         return req.req_id
+
+    def _note_crawl(self, req: EnRequest) -> None:
+        """Record this request's lambda point on its fingerprint's trail."""
+        tkey = (req.fingerprint, req.form, req.lambda2)
+        prev = self._lam_trail.pop(tkey, (None, None))
+        if prev[1] != req.lam:
+            prev = (prev[1], req.lam)
+        self._lam_trail[tkey] = prev
+        while len(self._lam_trail) > 512:
+            self._lam_trail.popitem(last=False)
 
     @property
     def pending_requests(self) -> List[EnRequest]:
@@ -453,6 +484,59 @@ class ContinuousScheduler:
                     hot[i] = True
         return alpha, w, beta, t_prev, nu_prev, hot
 
+    def _predict_candidates(self, reqs, form: str) -> list:
+        """Predicted next crawl points for this chunk's fingerprints.
+
+        A fingerprint whose trail shows two distinct positive lambda points
+        is a crawl; its GEOMETRIC continuation `last * (last / prev)` — the
+        step structure of every glmnet-style grid — is the prediction.
+        Points already in the cache and duplicates within the launch are
+        skipped (counter-free probe: speculation must not skew the client
+        hit rate). Returns [(request, predicted_lam), ...]."""
+        cands: list = []
+        seen: set = set()
+        for r in reqs:
+            trail = (self._lam_trail.get((r.fingerprint, form, r.lambda2))
+                     if r.fingerprint is not None else None)
+            if trail is None or trail[0] is None:
+                continue
+            prev, last = trail
+            if not (prev > 0.0 and last > 0.0) or prev == last:
+                continue
+            pred = last * (last / prev)
+            if not (math.isfinite(pred) and pred > 0.0):
+                continue
+            skey = (r.fingerprint, r.lambda2, pred)
+            if skey in seen or self.cache.probe(r.fingerprint, form, pred,
+                                                r.lambda2):
+                continue
+            seen.add(skey)
+            cands.append((r, pred))
+        return cands
+
+    def _fill_spec_slots(self, cands, key, b_real, Xb, yb, lamb, l2b,
+                         wa, ww, wb, wt, wnu, hot) -> tuple:
+        """Write the predicted problems into the padding slots (warm-started
+        from the crawl tip when the cache has it). Returns the spec tuple
+        `_complete` inserts the pre-solved solutions from."""
+        bn, bp, form = key
+        spec: list = []
+        for slot, (r, pred) in enumerate(cands, start=b_real):
+            n, p = r.X.shape
+            Xb[slot, :n, :p] = r.X
+            yb[slot, :n] = r.y
+            lamb[slot] = pred
+            l2b[slot] = r.lambda2
+            entry = self.cache.lookup(r.fingerprint, form, pred, r.lambda2,
+                                      count=False)
+            if entry is not None:
+                wa[slot], ww[slot], wb[slot] = entry.alpha, entry.w, entry.beta
+                wt[slot], wnu[slot] = entry.t, entry.nu
+                hot[slot] = True
+            spec.append((slot, r.fingerprint, float(pred), r.lambda2))
+        self.stats.speculative_slots += len(spec)
+        return tuple(spec)
+
     def _dispatch(self, key: tuple, reqs: List[EnRequest]) -> _InFlight:
         """Pad, stack, warm-start and launch one bucket — NO blocking: the
         returned arrays are futures under JAX async dispatch.
@@ -467,13 +551,27 @@ class ContinuousScheduler:
         mesh does not divide — still apply and fall back to one device)."""
         bn, bp, form = key
         b_real = len(reqs)
-        b_pad = (self.max_batch if self.fixed_batch
-                 else min(ceil_pow2(b_real, 1), self.max_batch))
+        cands = (self._predict_candidates(reqs, form)
+                 if self.speculate else [])
+        if self.fixed_batch:
+            b_pad = self.max_batch
+        else:
+            # speculation may GROW the pad one rung up the pow2 ladder to
+            # make room for predicted points — a lone crawling client would
+            # otherwise never have an idle slot to pre-solve in. The ladder
+            # and max_batch still bound the executable set.
+            want = b_real + min(len(cands), self.max_batch - b_real)
+            b_pad = min(ceil_pow2(max(want, b_real), 1), self.max_batch)
+        cands = cands[:b_pad - b_real]
         Xb, yb = stack_padded(reqs, bn, bp, b_pad, self.dtype)
         fill = [1.0] * (b_pad - b_real)
         lamb = np.asarray([r.lam for r in reqs] + fill, self.dtype)
         l2b = np.asarray([r.lambda2 for r in reqs] + fill, self.dtype)
         wa, ww, wb, wt, wnu, hot = self._warm_arrays(reqs, bn, bp, b_pad, form)
+        spec = ()
+        if cands:
+            spec = self._fill_spec_slots(cands, key, b_real, Xb, yb, lamb,
+                                         l2b, wa, ww, wb, wt, wnu, hot)
 
         mesh = self.mesh
         if (mesh is not None and not self._mesh_pinned
@@ -497,13 +595,14 @@ class ContinuousScheduler:
                 inf = _InFlight(key=key, reqs=tuple(reqs), beta=pts.beta,
                                 iters=pts.sven_iters, kkt=pts.kkt,
                                 alpha=carry.alpha, w=carry.w, t_out=pts.t,
-                                nu_out=pts.nu)
+                                nu_out=pts.nu, spec=spec)
             else:
                 sol = sven_batch(Xb, yb, lamb, l2b, self.config,
                                  warm_alpha=wa, warm_w=ww, route=route)
                 inf = _InFlight(key=key, reqs=tuple(reqs), beta=sol.beta,
                                 iters=sol.iters, kkt=sol.kkt, alpha=sol.alpha,
-                                w=sol.w, t_out=lamb, nu_out=jnp.zeros_like(lamb))
+                                w=sol.w, t_out=lamb, nu_out=jnp.zeros_like(lamb),
+                                spec=spec)
         self.stats.padded_slots += b_pad - b_real
         self._seen_shapes.add((bn, bp, b_pad, form))
         self.stats.bucket_shapes = len(self._seen_shapes)
@@ -532,6 +631,13 @@ class ContinuousScheduler:
                 self.cache.insert(req.fingerprint, form, WarmEntry(
                     lam=req.lam, lambda2=req.lambda2, alpha=alpha[i],
                     w=w[i], beta=beta[i], t=t_out[i], nu=nu_out[i]))
+        if self.cache is not None:
+            # speculative slots: nobody asked for these yet — the whole
+            # point is that the NEXT step of the crawl finds them warm
+            for slot, fp, lam, lam2 in inf.spec:
+                self.cache.insert(fp, form, WarmEntry(
+                    lam=lam, lambda2=lam2, alpha=alpha[slot], w=w[slot],
+                    beta=beta[slot], t=t_out[slot], nu=nu_out[slot]))
         self.metrics.completed([r.req_id for r in inf.reqs], self.clock())
 
 

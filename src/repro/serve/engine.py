@@ -112,10 +112,21 @@ class ElasticNetEngine:
                  path_config: PathConfig = PathConfig(),
                  max_batch: int = 64, min_n: int = 16, min_p: int = 8,
                  cache: Optional[SolutionCache] = "default",
+                 cache_dir: Optional[str] = None, speculate: bool = False,
                  mesh="auto", dtype=jnp.float64):
         if max_batch < 1 or min_n < 1 or min_p < 1:
             raise ValueError(f"ElasticNetEngine: max_batch/min_n/min_p must be "
                              f">= 1 (got {max_batch}/{min_n}/{min_p})")
+        # `cache_dir` upgrades the default warm-start cache to the two-tier
+        # one (DESIGN.md §11.2): solutions spill to a persistent directory
+        # that survives engine restarts and is shareable across processes. A
+        # restarted engine pointed at the same directory serves warm starts
+        # from its first request. Ignored when an explicit cache instance
+        # (or None) is passed — the caller owns tiering then.
+        if cache_dir is not None and cache == "default":
+            from repro.runtime.cache import TieredSolutionCache
+
+            cache = TieredSolutionCache(spill_dir=cache_dir)
         self.config = config
         self.path_config = path_config
         self.max_batch = max_batch
@@ -130,7 +141,8 @@ class ElasticNetEngine:
         self._scheduler = ContinuousScheduler(
             config, path_config=path_config, max_batch=max_batch,
             min_n=min_n, min_p=min_p, max_wait=None, cache=cache,
-            auto_launch_full=False, mesh=mesh, dtype=dtype)
+            auto_launch_full=False, mesh=mesh, speculate=speculate,
+            dtype=dtype)
 
     @property
     def scheduler(self) -> ContinuousScheduler:

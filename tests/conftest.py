@@ -1,6 +1,20 @@
 """Test configuration. NOTE: no XLA device-count flags here — tests must see
 the real single CPU device; only launch/dryrun.py forces 512 host devices."""
 import jax
+import pytest
 
 # Convex-solver exactness tests need f64 on CPU; model code pins its own dtypes.
 jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture(autouse=True)
+def _isolated_disk_caches(tmp_path, monkeypatch):
+    """Point every on-disk cache (`utils.cache_dir()`: autotune tiles,
+    routing calibrations, warm-start spill tiers) at this test's private
+    tmp dir. Without this, tests leak persisted state into each other AND
+    into the developer's real ~/.cache/repro-sven — a test that measures a
+    calibration pollutes every later test's routing, and a spill-tier test
+    could serve a stale entry written by a previous session. Subprocesses
+    launched through tests/_subprocess.py inherit the env var, so their
+    disk caches land in the same per-test sandbox."""
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path / "repro-cache"))

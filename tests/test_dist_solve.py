@@ -16,9 +16,6 @@ its real device set.
 """
 import json
 import math
-import os
-import subprocess
-import sys
 import textwrap
 
 import jax
@@ -26,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _subprocess import run_python
 from repro import dist
 from repro.core import cross_validate, sven, sven_routed, sven_sharded
 from repro.core.api import enet
@@ -376,11 +374,7 @@ _PARITY_8DEV = textwrap.dedent("""
 
 
 def test_multidevice_parity_subprocess():
-    env = dict(os.environ)
-    env.pop("XLA_FLAGS", None)
-    r = subprocess.run([sys.executable, "-c", _PARITY_8DEV], cwd=os.getcwd(),
-                       env=env, capture_output=True, text=True, timeout=900)
-    assert r.returncode == 0, r.stdout + r.stderr
+    r = run_python(snippet=_PARITY_8DEV, timeout=900)
     for tag in ("sven_sharded8", "batch8", "enet_path8", "cv8",
                 "cv_nested8", "routed8", "hinge_stats8"):
         assert f"{tag} OK" in r.stdout
@@ -428,15 +422,9 @@ def test_routing_decisions_never_price_worse_than_single():
     cost model prices above single-device, pinned routes are honored, and
     the tiny-lone-solve regression shape always routes single. (The
     1-device table is trivial and covered in-process above.)"""
-    env = dict(os.environ)
-    env.pop("XLA_FLAGS", None)
     for dc in (2, 8):
-        r = subprocess.run([sys.executable, "-c",
-                            _ROUTING_DECISIONS % {"dc": dc}], cwd=os.getcwd(),
-                           env=env, capture_output=True, text=True,
-                           timeout=900)
-        assert r.returncode == 0, f"dc={dc}:\n{r.stdout}\n{r.stderr}"
-        assert "ROUTING OK" in r.stdout
+        r = run_python(snippet=_ROUTING_DECISIONS % {"dc": dc}, timeout=900)
+        assert "ROUTING OK" in r.stdout, f"dc={dc}:\n{r.stdout}"
 
 
 _BUCKET_ORDER = textwrap.dedent("""
@@ -467,15 +455,9 @@ def test_bucket_placement_order_invariant_across_device_counts():
     SAME beta for every request id — mesh placement must never permute
     results within a bucket (slot order is the contract `_complete` unpads
     by)."""
-    env = dict(os.environ)
-    env.pop("XLA_FLAGS", None)
     results = {}
     for dc in (1, 2, 8):
-        r = subprocess.run([sys.executable, "-c",
-                            _BUCKET_ORDER % {"dc": dc}], cwd=os.getcwd(),
-                           env=env, capture_output=True, text=True,
-                           timeout=900)
-        assert r.returncode == 0, f"dc={dc}:\n{r.stdout}\n{r.stderr}"
+        r = run_python(snippet=_BUCKET_ORDER % {"dc": dc}, timeout=900)
         line = [l for l in r.stdout.splitlines()
                 if l.startswith("BETAS=")][-1]
         results[dc] = json.loads(line.split("=", 1)[1])

@@ -296,6 +296,39 @@ def test_warm_resolve_same_solution_fewer_iters():
     assert warm_iters <= cold_iters, (warm_iters, cold_iters)
 
 
+def test_speculative_presolve_rides_the_crawl():
+    """DESIGN.md §11.3: a geometric lambda crawl (the glmnet grid shape)
+    gets its NEXT point pre-solved in a padding slot, so by the time the
+    client asks for it the exact point is already cached — and speculation
+    never changes the answer or the client-facing hit accounting."""
+    X, y, t = _problem(40, 12, seed=12)
+    fp = fingerprint_problem(X, y)
+    sched = ContinuousScheduler(max_batch=4, max_wait=None, speculate=True)
+    lams = [t, 0.8 * t, 0.8 * 0.8 * t]     # exact ratio-0.8 crawl
+
+    sched.submit(X, y, t=lams[0], lambda2=1.0)
+    sched.drain()
+    assert sched.stats.speculative_slots == 0, "one point is not a crawl"
+    assert sched.cache.hits + sched.cache.misses == 1, (
+        "speculative probes must not touch the client hit/miss counters")
+
+    sched.submit(X, y, t=lams[1], lambda2=1.0)
+    sched.drain()
+    assert sched.stats.speculative_slots >= 1, (
+        "two crawl points must trigger a padding-slot pre-solve")
+    assert sched.cache.hits + sched.cache.misses == 2
+    # the geometric continuation last*(last/prev) = 0.64*t is solved ALREADY
+    assert sched.cache.probe(fp, CONSTRAINED, lams[2], 1.0)
+
+    hits_before = sched.cache.hits
+    r2 = sched.submit(X, y, t=lams[2], lambda2=1.0)
+    out = sched.drain()
+    assert sched.cache.hits == hits_before + 1, (
+        "the crawl's next request must warm-start off the speculation")
+    np.testing.assert_allclose(out[r2].beta, sven(X, y, lams[2], 1.0).beta,
+                               atol=ATOL)
+
+
 def test_batch_warm_operands_leave_solution_unchanged():
     X, y, t = _problem(30, 10, seed=9)
     ts = jnp.asarray([t, t * 1.1])
