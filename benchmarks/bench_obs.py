@@ -1,0 +1,147 @@
+"""Telemetry-layer benchmark: what does observability cost, and does it
+account for everything? Emits the ``obs`` section of BENCH_path.json
+(DESIGN.md §12).
+
+Three measurements on the same adjacent-lambda serving load:
+
+1. **Overhead** — interleaved best-of passes over one warmed scheduler with
+   structured tracing disabled vs enabled. The gate (validate_artifact) is
+   enabled <= 1.10x disabled wall time: spans are host-side monotonic-clock
+   reads and never force a device sync, so telemetry must be ~free next to
+   millisecond solves.
+2. **Trace + solve log** — the enabled passes' Chrome-trace export must
+   parse and carry the span taxonomy; the per-solve log must price every
+   dispatch (cost-model residual report by routed path).
+3. **Multihost accounting** — a 2-process coordinator run where the merged
+   fleet counters (workers piggyback registry deltas on result messages)
+   must agree with the coordinator's own admission/terminal accounting:
+   every admitted request lands in exactly one terminal-status counter and
+   the fleet saw exactly the admitted requests.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+from benchmarks.common import emit
+from repro.obs import (default_events, disable_tracing, enable_tracing,
+                       get_tracer)
+from repro.runtime import (ContinuousScheduler, LoadSpec, make_workload,
+                           run_open_loop)
+
+
+def _trace_valid(tracer, path: str) -> bool:
+    """Export + re-parse: Chrome-trace JSON with only complete/instant
+    events, every one timestamped."""
+    tracer.export(path)
+    with open(path) as fh:
+        doc = json.load(fh)
+    events = doc["traceEvents"]
+    return bool(events) and all(
+        ev.get("ph") in ("X", "i") and "ts" in ev and "name" in ev
+        for ev in events)
+
+
+def _multihost_accounting(requests: int, hosts: int = 2) -> dict:
+    """Fleet-merged worker counters vs the coordinator's own books."""
+    from repro.runtime.multihost import MultiHostCoordinator
+
+    spec = LoadSpec(n_requests=requests, n_datasets=2,
+                    shapes=((48, 24), (48, 24)), penalized_fraction=0.0,
+                    pattern="adjacent", seed=13)
+    workload = make_workload(spec)
+    coord = MultiHostCoordinator(n_hosts=hosts, max_batch=4)
+    try:
+        run_open_loop(coord, workload)
+        acct = coord.accounting()
+        fleet_requests = int(coord.fleet.counter(
+            "runtime_requests_total", "").total())
+    finally:
+        coord.shutdown()
+    return {
+        "requests_admitted": acct["admitted"],
+        "terminal_statuses": acct["terminals"],
+        "accounting_balanced": bool(acct["balanced"]),
+        "fleet_requests_total": fleet_requests,
+        # no fault injected: the fleet must have solved exactly what was
+        # admitted (requeues/speculation would legitimately raise this;
+        # bench_serve.run_multihost covers the faulted path)
+        "fleet_matches_accounting": fleet_requests == acct["admitted"],
+    }
+
+
+def run(requests: int = 32, concurrency: int = 8, reps: int = 7,
+        mh_requests: int = 8) -> dict:
+    # reps is cheap (each pass is ~20ms of warmed serving) and the 1.10x
+    # gate needs the interleaved best-of to converge: at reps<=3 a single
+    # lucky disabled pass can fake a >10% "overhead" out of pure jitter.
+    spec = LoadSpec(n_requests=requests, n_datasets=3,
+                    penalized_fraction=0.25, pattern="adjacent", seed=19)
+    workload = make_workload(spec)
+    # max_wait=None as in bench_serve: launches are a pure function of the
+    # workload, so enabled and disabled passes run identical schedules.
+    sched = ContinuousScheduler(max_batch=concurrency, max_wait=None)
+
+    disable_tracing()
+    run_open_loop(sched, workload)            # warmup: compile + warm cache
+    tracer = get_tracer()
+
+    # Interleave enabled/disabled passes and keep each mode's best wall
+    # time — back-to-back best-of cancels machine-load drift that a
+    # "first all-disabled then all-enabled" schedule would bake in.
+    best = {False: float("inf"), True: float("inf")}
+    p99 = {False: float("inf"), True: float("inf")}
+    spans_before = len(tracer.spans())
+    events_before = len(default_events().records())
+    solve_records0 = sched.solve_log.recorded
+    try:
+        for _ in range(reps):
+            for enabled in (False, True):
+                (enable_tracing if enabled else disable_tracing)()
+                out = run_open_loop(sched, workload)
+                if out["wall_seconds"] < best[enabled]:
+                    best[enabled] = out["wall_seconds"]
+                    p99[enabled] = out["p99_latency_s"]
+    finally:
+        disable_tracing()
+
+    span_count = len(tracer.spans()) - spans_before
+    span_counts = {k: int(v) for k, v in sorted(tracer.counts().items())}
+    with tempfile.TemporaryDirectory() as tmp:
+        trace_valid = _trace_valid(tracer, os.path.join(tmp, "trace.json"))
+
+    report = sched.solve_log.residual_report()
+    mh = _multihost_accounting(mh_requests)
+
+    overhead = best[True] / max(best[False], 1e-12)
+    result = {
+        "n_requests": requests,
+        "reps": reps,
+        "disabled_seconds": best[False],
+        "enabled_seconds": best[True],
+        "overhead_ratio": overhead,
+        "p99_disabled_s": p99[False],
+        "p99_enabled_s": p99[True],
+        "span_count": span_count,
+        "span_counts": span_counts,
+        "event_count": len(default_events().records()) - events_before,
+        "trace_valid": trace_valid,
+        "n_solve_records": sched.solve_log.recorded - solve_records0,
+        "n_unmodeled_solves": report["n_unmodeled"],
+        "residual_by_path": report["by_path"],
+        **mh,
+        "obs_ok": (overhead <= 1.10 and trace_valid and span_count > 0
+                   and report["n_unmodeled"] == 0
+                   and mh["accounting_balanced"]
+                   and mh["fleet_matches_accounting"]),
+    }
+    emit("obs_overhead", best[True],
+         f"disabled={best[False]*1e6:.1f}us ratio={overhead:.3f}x "
+         f"spans={span_count} trace_valid={trace_valid} "
+         f"mh_balanced={mh['accounting_balanced']}")
+    return result
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(requests=16, reps=2), indent=2))

@@ -2,9 +2,10 @@
 micro-benches. Prints ``name,us_per_call,derived`` CSV lines and writes the
 path-engine artifact ``BENCH_path.json`` (scan-vs-loop wall clock, trace
 counts, batch-vs-sequential speedup, CV throughput, serving runtime
-latency/throughput, per-backend kernel timings/parity) whenever the
-``path``/``batch``/``cv``/``serve``/``dist_solve``/``kernels`` benches
-run — CI validates the artifact schema on CPU via
+latency/throughput, per-backend kernel timings/parity, telemetry overhead
+and accounting) whenever the ``path``/``batch``/``cv``/``serve``/
+``dist_solve``/``kernels``/``multihost``/``obs`` benches run — CI
+validates the artifact schema on CPU via
 ``benchmarks/validate_artifact.py``.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] \
@@ -31,17 +32,26 @@ def main() -> None:
     from benchmarks import (bench_batch, bench_crossover, bench_cv,
                             bench_dist_solve, bench_distributed,
                             bench_kernels, bench_lm_smoke, bench_nggp,
-                            bench_path, bench_pggn, bench_reduction_ops,
-                            bench_serve)
+                            bench_obs, bench_path, bench_pggn,
+                            bench_reduction_ops, bench_serve)
 
     mods = {
         "path": (lambda: bench_path.run(points=6)) if args.quick else bench_path.run,
         "batch": (lambda: bench_batch.run(B=4)) if args.quick else bench_batch.run,
         "cv": (lambda: bench_cv.run(k=4, n_lambdas=8)) if args.quick else bench_cv.run,
-        "serve": ((lambda: bench_serve.run(requests=24, reps=2))
+        # quick serve uses 32 requests / best-of-3: at 24/2 the sustained
+        # ratio sits too close to the 2x gate once the LatencyRecorder fix
+        # sped the synchronous reference up — more warm requests amortize
+        # the runtime's fixed per-pass costs and de-flake the gate.
+        "serve": ((lambda: bench_serve.run(requests=32, reps=3))
                   if args.quick else bench_serve.run),
         "multihost": ((lambda: bench_serve.run_multihost(requests=16))
                       if args.quick else bench_serve.run_multihost),
+        # quick obs keeps the full 32-request / best-of-7 measurement: the
+        # extra passes are ~20ms each and the 1.10x overhead gate jitters
+        # on fewer reps; only the multihost leg is trimmed.
+        "obs": ((lambda: bench_obs.run(requests=32, mh_requests=6))
+                if args.quick else bench_obs.run),
         "dist_solve": ((lambda: bench_dist_solve.run(n=384, p=32, reps=2))
                        if args.quick else bench_dist_solve.run),
         "kernels": ((lambda: bench_kernels.run(n=384, p=32, reps=2))
@@ -61,7 +71,7 @@ def main() -> None:
         try:
             out = mods[name]()
             if (name in ("path", "batch", "cv", "serve", "dist_solve",
-                         "kernels", "multihost")
+                         "kernels", "multihost", "obs")
                     and isinstance(out, dict)):
                 artifact[name] = out
         except Exception:  # noqa: BLE001

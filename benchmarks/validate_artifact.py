@@ -15,9 +15,16 @@ that keeps the always-shard 0.10x lone-solve regression from recurring),
 and the per-backend kernel section: Pallas bodies at interpret-mode
 parity with the ref oracle on CPU runners, fused gram >= 1.5x over the
 unfused materialize-then-matmul reference on GPU runners, and the
-bf16+iterative-refinement solve within 1e-10 everywhere.
+bf16+iterative-refinement solve within 1e-10 everywhere. The ``obs``
+section (DESIGN.md §12) gates telemetry: tracing-enabled serving within
+1.10x of disabled, a round-trippable Chrome-trace export, every dispatch
+priced by the cost model, and multihost fleet counters agreeing with the
+coordinator's admission/terminal books. `--baseline` additionally diffs
+watched wall-clock keys against the committed previous-run artifact and
+WARNs (never fails) past +20%.
 
-    python benchmarks/validate_artifact.py [BENCH_path.json]
+    python benchmarks/validate_artifact.py [BENCH_path.json] \
+        [--baseline benchmarks/BENCH_baseline.json]
 """
 from __future__ import annotations
 
@@ -69,7 +76,26 @@ REQUIRED_KEYS = {
         "statuses", "lost_requests", "all_accounted", "spill_hits",
         "max_dev_vs_direct", "multihost_ok",
     },
+    "obs": {
+        "n_requests", "reps", "disabled_seconds", "enabled_seconds",
+        "overhead_ratio", "p99_disabled_s", "p99_enabled_s", "span_count",
+        "span_counts", "event_count", "trace_valid", "n_solve_records",
+        "n_unmodeled_solves", "residual_by_path", "requests_admitted",
+        "terminal_statuses", "accounting_balanced", "fleet_requests_total",
+        "fleet_matches_accounting", "obs_ok",
+    },
 }
+
+#: baseline regression watch (satellite, non-fatal): wall-clock keys whose
+#: value growing past +20% over the committed BENCH_baseline.json prints a
+#: WARN — timings, not invariants, so machine variance must not fail CI.
+BASELINE_TIMING_KEYS = {
+    "serve": ("runtime_seconds", "p99_latency_s"),
+    "dist_solve": ("solve_sharded_seconds", "solve_routed_seconds",
+                   "batch_sharded_seconds"),
+    "kernels": ("gram_seconds", "hinge_stats_seconds"),
+}
+BASELINE_TOLERANCE = 1.20
 
 
 def validate(artifact: dict) -> list:
@@ -157,17 +183,79 @@ def validate(artifact: dict) -> list:
           "materialize-then-matmul reference")
     check("kernels", kernels.get("kernels_ok") is True,
           "kernel section gate failed")
+    obs = artifact.get("obs", {})
+    check("obs", obs.get("overhead_ratio", 99.0) <= 1.10,
+          "structured tracing cost more than 10% of serving wall time — "
+          "spans must stay host-side clock reads, never device syncs")
+    check("obs", obs.get("trace_valid") is True,
+          "Chrome-trace export did not round-trip as valid trace JSON")
+    check("obs", obs.get("span_count", 0) > 0,
+          "enabled passes recorded no spans")
+    check("obs", obs.get("n_unmodeled_solves", 99) == 0,
+          "a dispatch reached the solve log without a cost-model price")
+    check("obs", obs.get("accounting_balanced") is True,
+          "coordinator books unbalanced: an admitted request is missing "
+          "from the terminal-status counters (or counted twice)")
+    check("obs", obs.get("fleet_matches_accounting") is True,
+          "fleet-merged worker counters disagree with the coordinator's "
+          "admission count on a fault-free run")
+    check("obs", obs.get("obs_ok") is True,
+          "obs section gate failed")
     return errors
 
 
+def compare_baseline(artifact: dict, baseline: dict) -> list:
+    """Per-section timing deltas vs the committed baseline artifact.
+
+    Returns WARN strings for any watched timing that regressed past
+    +20%; sections or keys absent from either side are skipped (the
+    committed baseline may predate newer benches, and partial ``--only``
+    runs may omit sections). Never fatal — see BASELINE_TIMING_KEYS.
+    """
+    warnings = []
+    for section, keys in BASELINE_TIMING_KEYS.items():
+        cur, base = artifact.get(section), baseline.get(section)
+        if not cur or not base:
+            continue
+        for key in keys:
+            c, b = cur.get(key), base.get(key)
+            if not (isinstance(c, (int, float))
+                    and isinstance(b, (int, float)) and b > 0):
+                continue
+            ratio = c / b
+            if ratio > BASELINE_TOLERANCE:
+                warnings.append(
+                    f"{section}.{key} regressed {ratio:.2f}x vs baseline "
+                    f"({b:.4g}s -> {c:.4g}s; tolerance "
+                    f"{BASELINE_TOLERANCE:.2f}x)")
+    return warnings
+
+
 def main() -> None:
-    fname = sys.argv[1] if len(sys.argv) > 1 else "BENCH_path.json"
+    import argparse
+    import os
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("artifact", nargs="?", default="BENCH_path.json")
+    ap.add_argument("--baseline", default="benchmarks/BENCH_baseline.json",
+                    help="committed previous-run artifact to diff timings "
+                         "against (>20%% slower prints a non-fatal WARN); "
+                         "skipped when the file is absent")
+    args = ap.parse_args()
+    fname = args.artifact
     artifact = json.load(open(fname))
     errors = validate(artifact)
     if errors:
         for e in errors:
             print(f"[validate_artifact] FAIL: {e}")
         sys.exit(1)
+    if os.path.exists(args.baseline):
+        warnings = compare_baseline(artifact, json.load(open(args.baseline)))
+        for w in warnings:
+            print(f"[validate_artifact] WARN: {w}")
+        if not warnings:
+            print(f"[validate_artifact] baseline {args.baseline}: "
+                  f"no timing regressions past {BASELINE_TOLERANCE:.2f}x")
     ds = artifact.get("dist_solve")
     dist_note = (f", dist batch {ds['batch_speedup']:.2f}x on "
                  f"{ds['devices']} devices "
@@ -186,6 +274,11 @@ def main() -> None:
                if kn.get("gpu_speedup") else "")
         dist_note += (f", kernels {kn['kernel_backend']} "
                       f"(bf16 dev {kn['bf16_refined_max_dev']:.1e}{spd})")
+    ob = artifact.get("obs")
+    if ob:
+        dist_note += (f", telemetry {ob['overhead_ratio']:.3f}x overhead "
+                      f"({ob['span_count']} spans, accounting "
+                      f"{'balanced' if ob['accounting_balanced'] else 'OFF'})")
     print(f"[validate_artifact] {fname} OK: "
           f"path scan {artifact['path']['scan_vs_loop_speedup']:.2f}x, "
           f"cv batched {artifact['cv']['cv_batched_vs_sequential_speedup']:.2f}x, "

@@ -351,14 +351,27 @@ def _batch_costs(n: int, p: int, B: int, mode: str, cal: Calibration,
 
 def _decide(costs: dict, cal: Calibration, pinned: Optional[str]) -> RouteDecision:
     if pinned is not None:
-        return RouteDecision(path=pinned, costs=costs, calibration=cal,
-                             reason=f"pinned route={pinned!r}")
-    path = min(costs, key=costs.get)
-    others = {k: v for k, v in costs.items() if k != path}
-    margin = (min(others.values()) / max(costs[path], 1e-12)
-              if others else float("inf"))
-    return RouteDecision(path=path, costs=costs, calibration=cal,
-                         reason=f"cost model: {path} wins {margin:.2f}x")
+        decision = RouteDecision(path=pinned, costs=costs, calibration=cal,
+                                 reason=f"pinned route={pinned!r}")
+    else:
+        path = min(costs, key=costs.get)
+        others = {k: v for k, v in costs.items() if k != path}
+        margin = (min(others.values()) / max(costs[path], 1e-12)
+                  if others else float("inf"))
+        decision = RouteDecision(path=path, costs=costs, calibration=cal,
+                                 reason=f"cost model: {path} wins {margin:.2f}x")
+    # telemetry (DESIGN.md §12): each FRESH verdict (cached ones replay the
+    # same decision) counts on the process registry and drops a trace
+    # instant carrying the full price table the model compared.
+    from repro.obs.metrics import default_registry
+    from repro.obs.trace import get_tracer
+
+    default_registry().counter(
+        "route_decisions_total", "cost-model routing verdicts",
+        ("path",)).inc(path=decision.path)
+    get_tracer().instant("route", path=decision.path, costs=dict(costs),
+                         reason=decision.reason)
+    return decision
 
 
 def _resolve_route_mesh(mesh):

@@ -32,7 +32,6 @@ final KKT residuals of the *original* Elastic Net problem, and the objective.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 from functools import partial
 from typing import NamedTuple, Optional
@@ -47,22 +46,34 @@ from repro.core.svm import solve_dual_fista, solve_dual_newton, solve_primal_new
 # ---------------------------------------------------------------------------
 # Trace instrumentation: each jit-wrapped entry point bumps its counter ONCE
 # per trace (the bump runs at trace time, not at execution time). Tests and
-# benchmarks assert e.g. a 40-point path costs exactly one trace.
+# benchmarks assert e.g. a 40-point path costs exactly one trace. The counts
+# live on the process-wide obs registry (``solver_traces_total{entry=...}``,
+# DESIGN.md §12.2) so they export beside router decisions; a `trace:<entry>`
+# instant marks WHEN each (re)trace happened on the timeline — a nonzero
+# steady-state count is the regression the zero-retrace CI gate catches.
 # ---------------------------------------------------------------------------
-_TRACE_COUNTS: collections.Counter = collections.Counter()
+
+def _trace_counter():
+    from repro.obs.metrics import default_registry
+    return default_registry().counter(
+        "solver_traces_total", "jit traces per solver entry point", ("entry",))
 
 
 def _bump_trace(name: str) -> None:
-    _TRACE_COUNTS[name] += 1
+    _trace_counter().inc(entry=name)
+    from repro.obs.trace import get_tracer
+    get_tracer().instant(f"trace:{name}")
 
 
 def trace_counts() -> dict:
     """Snapshot of {entry_point: times_traced} since the last reset."""
-    return dict(_TRACE_COUNTS)
+    return {entry: int(v)
+            for (entry,), v in _trace_counter().series().items()}
 
 
 def reset_trace_counts() -> None:
-    _TRACE_COUNTS.clear()
+    from repro.obs.metrics import default_registry
+    default_registry().reset_instrument("solver_traces_total")
 
 
 class SvenArrays(NamedTuple):

@@ -46,6 +46,14 @@ class SolverState(NamedTuple):
     residual: jax.Array   # solver's optimality measure (sup-norm)
     converged: jax.Array  # bool: residual <= tol reached
 
+    def telemetry(self) -> dict:
+        """Host-side scalar summary of where the solve ended (DESIGN.md
+        §12.5): plain Python numbers for solve logs and event records.
+        Call OUTSIDE jit only — it materializes device scalars."""
+        return {"iters": int(self.iters),
+                "residual": float(self.residual),
+                "converged": bool(self.converged)}
+
 
 class SolverMachine(NamedTuple):
     """An init/step/run triple closed over the problem operators."""

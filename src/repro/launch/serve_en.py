@@ -31,6 +31,37 @@ def _direct_solve(item, cfg: SvenConfig):
     return sven(item.X, item.y, item.lam, item.lambda2, cfg).beta
 
 
+def _serve_metrics(registry, port: int):
+    """Live Prometheus text exposition on a daemon thread (stdlib only).
+
+    Scrape target for the duration of the run: ``GET /metrics`` renders
+    `registry.to_prometheus()` at request time, so a scraper polling while
+    waves are in flight sees counters move.
+    """
+    import http.server
+    import threading
+
+    class Handler(http.server.BaseHTTPRequestHandler):
+        def do_GET(self):
+            if self.path not in ("/metrics", "/"):
+                self.send_error(404)
+                return
+            body = registry.to_prometheus().encode()
+            self.send_response(200)
+            self.send_header("Content-Type",
+                             "text/plain; version=0.0.4; charset=utf-8")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def log_message(self, *a):   # keep the wave report readable
+            pass
+
+    server = http.server.ThreadingHTTPServer(("127.0.0.1", port), Handler)
+    threading.Thread(target=server.serve_forever, daemon=True).start()
+    return server
+
+
 def run(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=24, help="requests per wave")
@@ -52,7 +83,22 @@ def run(argv=None):
     ap.add_argument("--speculate", action="store_true",
                     help="pre-solve predicted next lambda-crawl points in "
                          "idle batch slots (DESIGN.md §11.3)")
+    ap.add_argument("--trace-out", type=str, default=None,
+                    help="enable structured tracing and export a Chrome-trace "
+                         "JSON here on exit (chrome://tracing / Perfetto)")
+    ap.add_argument("--metrics-json", type=str, default=None,
+                    help="write the final metrics-registry snapshot (JSON)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve live Prometheus text exposition on this port "
+                         "for the duration of the run (GET /metrics)")
+    ap.add_argument("--events-out", type=str, default=None,
+                    help="dump the structured event ring as JSONL on exit")
     args = ap.parse_args(argv)
+
+    if args.trace_out is not None:
+        from repro.obs import enable_tracing
+
+        enable_tracing()
 
     cfg = SvenConfig()
     total = args.requests + args.penalized
@@ -65,6 +111,12 @@ def run(argv=None):
                                 max_wait=args.max_wait, cache=cache,
                                 speculate=args.speculate)
     reference = ElasticNetEngine(cfg, max_batch=args.max_batch, cache=None)
+
+    metrics_server = None
+    if args.metrics_port is not None:
+        metrics_server = _serve_metrics(sched.registry, args.metrics_port)
+        print(f"[serve_en] Prometheus exposition on "
+              f"http://127.0.0.1:{metrics_server.server_address[1]}/metrics")
 
     new_execs_last_wave = 0
     for wave in range(args.waves):
@@ -138,6 +190,26 @@ def run(argv=None):
           f"{sched.stats.launched_flush} flush; "
           f"warm-start hits {sched.cache.hits}/"
           f"{sched.cache.hits + sched.cache.misses}.")
+
+    if args.trace_out is not None:
+        from repro.obs import get_tracer
+
+        get_tracer().export(args.trace_out)
+        print(f"[serve_en] trace -> {args.trace_out} "
+              f"({len(get_tracer().spans())} events)")
+    if args.metrics_json is not None:
+        import json
+
+        with open(args.metrics_json, "w") as fh:
+            json.dump(sched.registry.snapshot(), fh, indent=2, sort_keys=True)
+        print(f"[serve_en] metrics snapshot -> {args.metrics_json}")
+    if args.events_out is not None:
+        from repro.obs import default_events
+
+        default_events().dump(args.events_out)
+        print(f"[serve_en] events -> {args.events_out}")
+    if metrics_server is not None:
+        metrics_server.shutdown()
 
 
 if __name__ == "__main__":

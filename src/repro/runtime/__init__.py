@@ -9,7 +9,14 @@ adjacent-lambda observation (`cache`), rank-1 streaming-row updates
 (`online`), latency/throughput percentile accounting (`metrics`) and a
 reproducible open-loop load generator (`loadgen` — also the CI serving
 smoke: ``python -m repro.runtime.loadgen``).
+
+Telemetry (DESIGN.md §12) lives in `repro.obs` — the registry / tracer /
+event-log surface is re-exported here because the runtime components are
+its primary producers.
 """
+from repro.obs import (EventLog, MetricsRegistry, SolveLog, SolveRecord,
+                       Tracer, default_events, default_registry,
+                       disable_tracing, enable_tracing, get_tracer)
 from repro.runtime.cache import (CONSTRAINED, PENALIZED, PersistentCacheTier,
                                  SolutionCache, TieredSolutionCache,
                                  WarmEntry, fingerprint_problem)
@@ -43,4 +50,14 @@ __all__ = [
     "LoadItem",
     "make_workload",
     "run_open_loop",
+    "MetricsRegistry",
+    "Tracer",
+    "EventLog",
+    "SolveLog",
+    "SolveRecord",
+    "default_registry",
+    "default_events",
+    "get_tracer",
+    "enable_tracing",
+    "disable_tracing",
 ]

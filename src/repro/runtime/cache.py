@@ -38,12 +38,16 @@ import hashlib
 import math
 import os
 import tempfile
-import time
 import zipfile
 from pathlib import Path
 from typing import NamedTuple, Optional, Tuple
 
 import numpy as np
+
+from repro.obs import clock as obs_clock
+from repro.obs import events as obs_events
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import get_tracer
 
 #: Problem forms the runtime serves; the cache keeps them in disjoint keys
 #: because their lambda-points live on different axes (t vs lambda1).
@@ -111,10 +115,17 @@ class SolutionCache:
     |log(lam_r/lam_e)| + |log(lambda2_r/lambda2_e)| <= neighborhood. The
     default (1.0 ~ one e-fold) is deliberately wide — a warm start is an
     initial iterate, so a far hit costs extra iterations, never correctness.
+
+    Hit/miss accounting lives on a `MetricsRegistry`
+    (``cache_lookups_total{result=hit|miss}``, DESIGN.md §12.2) — the
+    scheduler passes its own so cache counters export with the rest of its
+    telemetry; the historical ``hits`` / ``misses`` ints remain as
+    read-through properties.
     """
 
     def __init__(self, *, max_problems: int = 128, per_problem: int = 8,
-                 neighborhood: float = 1.0) -> None:
+                 neighborhood: float = 1.0,
+                 registry: Optional[MetricsRegistry] = None) -> None:
         if max_problems < 1 or per_problem < 1 or neighborhood <= 0:
             raise ValueError(
                 f"SolutionCache: max_problems/per_problem must be >= 1 and "
@@ -123,8 +134,10 @@ class SolutionCache:
         self.max_problems = max_problems
         self.per_problem = per_problem
         self.neighborhood = neighborhood
-        self.hits = 0
-        self.misses = 0
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self._lookups = self.registry.counter(
+            "cache_lookups_total",
+            "warm-start cache lookups by result", ("result",))
         self._store: "collections.OrderedDict[Tuple[str, str], list]" = (
             collections.OrderedDict())
 
@@ -132,13 +145,20 @@ class SolutionCache:
         return sum(len(v) for v in self._store.values())
 
     @property
+    def hits(self) -> int:
+        return int(self._lookups.value(result="hit"))
+
+    @property
+    def misses(self) -> int:
+        return int(self._lookups.value(result="miss"))
+
+    @property
     def hit_rate(self) -> float:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
 
     def reset_counters(self) -> None:
-        self.hits = 0
-        self.misses = 0
+        self.registry.reset_instrument("cache_lookups_total")
 
     def _search(self, fp: str, form: str, lam: float,
                 lambda2: float) -> Tuple[Optional[WarmEntry], float]:
@@ -164,10 +184,10 @@ class SolutionCache:
         best, dist = self._search(fp, form, lam, lambda2)
         if best is not None and dist <= self.neighborhood:
             if count:
-                self.hits += 1
+                self._lookups.inc(result="hit")
             return best
         if count:
-            self.misses += 1
+            self._lookups.inc(result="miss")
         return None
 
     def probe(self, fp: str, form: str, lam: float, lambda2: float, *,
@@ -236,7 +256,8 @@ class PersistentCacheTier:
     """
 
     def __init__(self, root=None, *, max_bytes: int = 64 << 20,
-                 ttl_s: Optional[float] = None, clock=time.time) -> None:
+                 ttl_s: Optional[float] = None,
+                 clock=obs_clock.walltime) -> None:
         if max_bytes < 1 or (ttl_s is not None and ttl_s <= 0):
             raise ValueError(f"PersistentCacheTier: need max_bytes >= 1 and "
                              f"ttl_s > 0 or None (got {max_bytes}/{ttl_s})")
@@ -288,8 +309,10 @@ class PersistentCacheTier:
                     or entry.alpha.shape[0] != 2 * entry.beta.shape[0]):
                 raise ValueError("inconsistent warm-array geometry")
             return entry, created
-        except _LOAD_ERRORS:
+        except _LOAD_ERRORS as e:
             self.corrupt_dropped += 1
+            obs_events.emit("cache_corrupt", path=path.name,
+                            error=type(e).__name__)
             self._drop(path)
             return None, None
 
@@ -369,8 +392,10 @@ class PersistentCacheTier:
             try:
                 with np.load(path, allow_pickle=False) as z:
                     created = float(z["created"])
-            except _LOAD_ERRORS:
+            except _LOAD_ERRORS as e:
                 self.corrupt_dropped += 1
+                obs_events.emit("cache_corrupt", path=path.name,
+                                error=type(e).__name__)
                 self._drop(path)
                 continue
             if self.clock() - created > self.ttl_s:
@@ -411,32 +436,40 @@ class TieredSolutionCache(SolutionCache):
                  neighborhood: float = 1.0,
                  spill: Optional[PersistentCacheTier] = None,
                  spill_dir=None, max_bytes: int = 64 << 20,
-                 ttl_s: Optional[float] = None, clock=time.time) -> None:
+                 ttl_s: Optional[float] = None, clock=obs_clock.walltime,
+                 registry: Optional[MetricsRegistry] = None) -> None:
         super().__init__(max_problems=max_problems, per_problem=per_problem,
-                         neighborhood=neighborhood)
+                         neighborhood=neighborhood, registry=registry)
         if spill is None:
             spill = PersistentCacheTier(spill_dir, max_bytes=max_bytes,
                                         ttl_s=ttl_s, clock=clock)
         self.spill = spill
-        self.spill_hits = 0
+        self._spill_hits = self.registry.counter(
+            "cache_spill_hits_total",
+            "memory-tier misses served by the persistent spill tier")
+
+    @property
+    def spill_hits(self) -> int:
+        return int(self._spill_hits.value())
 
     def lookup(self, fp: str, form: str, lam: float, lambda2: float, *,
                count: bool = True) -> Optional[WarmEntry]:
         best, dist = self._search(fp, form, lam, lambda2)
         if best is not None and dist <= self.neighborhood:
             if count:
-                self.hits += 1
+                self._lookups.inc(result="hit")
             return best
         spilled = self.spill.lookup(fp, form, lam, lambda2,
                                     neighborhood=self.neighborhood)
         if spilled is not None:
             super().insert(fp, form, spilled)      # promote, memory only
+            get_tracer().instant("cache.spill_promote", form=form)
             if count:
-                self.hits += 1
-                self.spill_hits += 1
+                self._lookups.inc(result="hit")
+                self._spill_hits.inc()
             return spilled
         if count:
-            self.misses += 1
+            self._lookups.inc(result="miss")
         return None
 
     def insert(self, fp: str, form: str, entry: WarmEntry) -> None:
@@ -445,4 +478,4 @@ class TieredSolutionCache(SolutionCache):
 
     def reset_counters(self) -> None:
         super().reset_counters()
-        self.spill_hits = 0
+        self.registry.reset_instrument("cache_spill_hits_total")

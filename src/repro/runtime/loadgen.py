@@ -24,6 +24,7 @@ from typing import List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs import clock as obs_clock
 from repro.runtime.cache import CONSTRAINED, PENALIZED
 
 
@@ -115,10 +116,10 @@ def run_open_loop(scheduler, workload: Sequence[LoadItem], *,
     """
     scheduler.metrics.reset()
     ids = []
-    t0 = time.perf_counter()
+    t0 = obs_clock.monotonic()
     for item in workload:
         if pace and item.arrival > 0.0:
-            lag = t0 + item.arrival - time.perf_counter()
+            lag = t0 + item.arrival - obs_clock.monotonic()
             if lag > 0:
                 time.sleep(lag)
         kw = ({"lambda1": item.lam} if item.form == PENALIZED
@@ -126,11 +127,52 @@ def run_open_loop(scheduler, workload: Sequence[LoadItem], *,
         ids.append(scheduler.submit(item.X, item.y, lambda2=item.lambda2,
                                     priority=item.priority, **kw))
     results = scheduler.drain()
-    wall = time.perf_counter() - t0
+    wall = obs_clock.monotonic() - t0
     out = {"n_requests": len(workload), "wall_seconds": wall,
            "results": results, "ids": ids}
     out.update(scheduler.metrics.summary())
     return out
+
+
+def export_telemetry(args, *, registry_snapshot: dict,
+                     required_metrics: Sequence[str],
+                     required_spans: Sequence[str] = ()) -> None:
+    """Write `--trace-out` / `--metrics-json` / `--events-out` artifacts and
+    SCHEMA-CHECK them on the spot (the CI telemetry smoke): the trace must
+    be loadable Chrome-trace JSON containing the expected span names, the
+    metrics snapshot must carry the expected series. Assertion failures here
+    are loadgen failures — a telemetry regression fails the smoke, not just
+    some later dashboard."""
+    import json
+
+    from repro.obs.events import default_events
+    from repro.obs.trace import get_tracer
+
+    if args.trace_out:
+        path = get_tracer().export(args.trace_out)
+        with open(path) as f:
+            trace = json.load(f)
+        names = {ev["name"] for ev in trace["traceEvents"]}
+        missing = set(required_spans) - names
+        assert not missing, f"trace missing expected spans: {sorted(missing)}"
+        assert all(ev["ph"] in ("X", "i") and "ts" in ev
+                   for ev in trace["traceEvents"]), "malformed trace event"
+        print(f"[loadgen] trace: {len(trace['traceEvents'])} events "
+              f"-> {path}")
+    if args.metrics_json:
+        with open(args.metrics_json, "w") as f:
+            json.dump(registry_snapshot, f, indent=1, default=str)
+        flat = json.dumps(registry_snapshot)
+        missing = [m for m in required_metrics if m not in flat]
+        assert not missing, f"metrics snapshot missing series: {missing}"
+        print(f"[loadgen] metrics snapshot -> {args.metrics_json}")
+    if args.events_out:
+        path = default_events().dump(args.events_out)
+        with open(path) as f:
+            for line in f:
+                rec = json.loads(line)
+                assert "ts" in rec and "kind" in rec, f"malformed event {rec}"
+        print(f"[loadgen] events: {len(default_events())} -> {path}")
 
 
 def run_multihost(args) -> None:
@@ -177,10 +219,20 @@ def run_multihost(args) -> None:
             stats = coord.shutdown()
         hits = sum(s["cache_hits"] for s in stats)
         spill = sum(s["spill_hits"] for s in stats)
+        acct = coord.accounting()
         print(f"[loadgen] multihost OK: {args.hosts} hosts, "
               f"{coord.hosts_lost} lost, {coord.requeued_batches} batches "
               f"requeued, {hits} warm hits ({spill} via shared spill).")
+        print(f"[loadgen] accounting: {acct['admitted']} admitted, "
+              f"terminals={acct['terminals']}")
+        assert acct["balanced"], f"terminal accounting broken: {acct}"
         assert hits > 0, "multihost waves produced no warm-start hits"
+        export_telemetry(
+            args, registry_snapshot=coord.metrics_snapshot(),
+            required_metrics=("requests_admitted_total",
+                              "requests_terminal_total",
+                              "runtime_requests_total"),
+            required_spans=("mh.place",) if args.trace_out else ())
 
 
 def main(argv=None) -> None:
@@ -206,7 +258,19 @@ def main(argv=None) -> None:
                          "worker processes instead of an in-process scheduler")
     ap.add_argument("--kill-host", type=int, default=-1,
                     help="with --hosts: SIGKILL this host before wave 1")
+    ap.add_argument("--trace-out", default="",
+                    help="enable tracing; write Chrome-trace JSON here and "
+                         "schema-check it")
+    ap.add_argument("--metrics-json", default="",
+                    help="write the metrics snapshot (JSON) here and "
+                         "schema-check it")
+    ap.add_argument("--events-out", default="",
+                    help="write the structured event log (JSONL) here")
     args = ap.parse_args(argv)
+
+    if args.trace_out:
+        from repro.obs.trace import enable_tracing
+        enable_tracing()
 
     if args.hosts > 0:
         run_multihost(args)
@@ -246,6 +310,13 @@ def main(argv=None) -> None:
     print(f"[loadgen] steady state OK: {sched.stats.requests} requests, "
           f"{steady_execs} executables, zero retrace after wave 0, "
           f"{sched.cache.hits} warm-start cache hits.")
+    export_telemetry(
+        args, registry_snapshot=sched.registry.snapshot(),
+        required_metrics=("runtime_requests_total", "runtime_launches_total",
+                          "cache_lookups_total", "request_latency_seconds",
+                          "requests_terminal_total"),
+        required_spans=("admit", "launch", "warm_start", "harvest.block",
+                        "complete") if args.trace_out else ())
 
 
 if __name__ == "__main__":

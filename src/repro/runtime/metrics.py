@@ -1,19 +1,31 @@
-"""Latency and throughput accounting for the serving runtime (DESIGN.md §8).
+"""Latency and throughput accounting for the serving runtime (DESIGN.md §8,
+§12.2).
 
 Every request passes through three instants — submitted (admission),
 launched (its micro-batch dispatched to the device) and completed (results
 unpadded and delivered) — so the recorder can split end-to-end latency into
 queue wait (submitted -> launched: the price of coalescing) and service
 time (launched -> completed: device compute + harvest). `summary()` folds
-the per-request records into the percentile/throughput numbers
+the rolled-up state into the percentile/throughput numbers
 `benchmarks/bench_serve.py` serializes into BENCH_path.json's ``serve``
 section.
+
+Memory is BOUNDED: only OPEN (not-yet-completed) requests keep a
+per-request record; completion folds the record into exponential-bucket
+histograms on the recorder's `MetricsRegistry` (`request_latency_seconds`,
+`request_queue_wait_seconds`) plus scalar rollups. The previous
+implementation retained every completed `RequestTimes` forever — a slow
+leak under the long-running loadgen. Percentiles are now histogram
+quantiles (<= ~4% relative error, exact at min/max), which every consumer
+of `summary()` uses as ratios or ordering, never as exact values.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 from typing import Dict, Iterable, Optional, Sequence
+
+from repro.obs.metrics import MetricsRegistry
 
 
 def percentile(values: Sequence[float], q: float) -> float:
@@ -52,34 +64,71 @@ class RequestTimes:
 
 
 class LatencyRecorder:
-    """Per-request event log; pure host-side bookkeeping, no device syncs."""
+    """Per-request event log; pure host-side bookkeeping, no device syncs.
 
-    def __init__(self) -> None:
-        self._times: Dict[int, RequestTimes] = {}
+    `registry` hooks the latency/queue-wait histograms into an owner's
+    `MetricsRegistry` (the scheduler passes its own, so the series show up
+    in its Prometheus exposition); by default the recorder keeps a private
+    one. Open requests are the only per-request state — completed requests
+    live on solely as histogram mass.
+    """
+
+    def __init__(self, *, registry: Optional[MetricsRegistry] = None) -> None:
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self._open: Dict[int, RequestTimes] = {}
+        self._lat = self.registry.histogram(
+            "request_latency_seconds",
+            "end-to-end latency of completed requests")
+        self._wait = self.registry.histogram(
+            "request_queue_wait_seconds",
+            "admission -> launch coalescing wait of completed requests")
+        self._n_completed = 0
+        self._first_submitted: Optional[float] = None
+        self._last_completed: Optional[float] = None
 
     def submitted(self, req_id: int, now: float) -> None:
-        self._times[req_id] = RequestTimes(submitted=now)
+        self._open[req_id] = RequestTimes(submitted=now)
 
     def launched(self, req_ids: Iterable[int], now: float) -> None:
-        # ids missing from _times were submitted before a reset() — they
-        # are simply no longer tracked, never an error on the serving path
+        # ids missing from the open table were submitted before a reset()
+        # (or already completed) — they are simply no longer tracked, never
+        # an error on the serving path
         for rid in req_ids:
-            t = self._times.get(rid)
+            t = self._open.get(rid)
             if t is not None:
                 t.launched = now
 
     def completed(self, req_ids: Iterable[int], now: float) -> None:
         for rid in req_ids:
-            t = self._times.get(rid)
-            if t is not None:
-                t.completed = now
+            t = self._open.pop(rid, None)
+            if t is None:
+                continue
+            t.completed = now
+            self._lat.observe(max(t.latency, 0.0))
+            if t.queue_wait is not None:
+                self._wait.observe(max(t.queue_wait, 0.0))
+            self._n_completed += 1
+            if (self._first_submitted is None
+                    or t.submitted < self._first_submitted):
+                self._first_submitted = t.submitted
+            if self._last_completed is None or now > self._last_completed:
+                self._last_completed = now
 
     def reset(self) -> None:
-        self._times.clear()
+        self._open.clear()
+        self._lat.reset()
+        self._wait.reset()
+        self._n_completed = 0
+        self._first_submitted = None
+        self._last_completed = None
+
+    @property
+    def open_count(self) -> int:
+        return len(self._open)
 
     @property
     def completed_count(self) -> int:
-        return sum(1 for t in self._times.values() if t.completed is not None)
+        return self._n_completed
 
     def summary(self, quantiles: Sequence[float] = (50.0, 90.0, 99.0)) -> dict:
         """Latency percentiles (seconds) + open-loop throughput (req/s).
@@ -88,20 +137,18 @@ class LatencyRecorder:
         submission to the last completion — the sustained rate an open-loop
         client observed, not the reciprocal of mean latency.
         """
-        done = [t for t in self._times.values() if t.completed is not None]
-        if not done:
+        lat = self._lat.series().get(())
+        if self._n_completed == 0 or lat is None or lat.count == 0:
             return {"n_completed": 0, "req_per_s": 0.0}
-        lat = [t.latency for t in done]
-        waits = [t.queue_wait for t in done if t.queue_wait is not None]
-        span = (max(t.completed for t in done)
-                - min(t.submitted for t in done))
+        span = self._last_completed - self._first_submitted
         out = {
-            "n_completed": len(done),
-            "req_per_s": len(done) / max(span, 1e-12),
-            "mean_latency_s": sum(lat) / len(lat),
+            "n_completed": self._n_completed,
+            "req_per_s": self._n_completed / max(span, 1e-12),
+            "mean_latency_s": lat.sum / lat.count,
         }
         for q in quantiles:
-            out[f"p{int(q)}_latency_s"] = percentile(lat, q)
-        if waits:
-            out["mean_queue_wait_s"] = sum(waits) / len(waits)
+            out[f"p{int(q)}_latency_s"] = lat.quantile(q)
+        wait = self._wait.series().get(())
+        if wait is not None and wait.count:
+            out["mean_queue_wait_s"] = wait.sum / wait.count
         return out

@@ -51,12 +51,15 @@ from __future__ import annotations
 import math
 import multiprocessing as mp
 import os
-import time
 import traceback
 from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.obs import clock as obs_clock
+from repro.obs import events as obs_events
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import get_tracer
 from repro.runtime.cache import CONSTRAINED, PENALIZED
 from repro.runtime.metrics import LatencyRecorder
 
@@ -71,9 +74,16 @@ def _worker_main(host_id: int, conn, cfg: dict) -> None:
     Protocol (parent -> child): ("solve", batch_id, items) | ("stop",).
     (child -> parent): ("ready", host_id) once serving; ("hb", host_id, ts)
     whenever `heartbeat_interval` passes with no work; ("result", host_id,
-    batch_id, {req_id: result dict}); ("error", host_id, batch_id, tb) for
-    a failed batch (the coordinator requeues it); ("stats", host_id, dict)
-    once, just before a clean exit.
+    batch_id, {req_id: result dict}, deltas); ("error", host_id, batch_id,
+    tb, deltas) for a failed batch (the coordinator requeues it); ("stats",
+    host_id, dict, deltas) once, just before a clean exit.
+
+    `deltas` are the worker registry's `counter_deltas()` — metric
+    increments since the previous message, piggybacked on the pipes the
+    results already ride (DESIGN.md §12.4). Each delta is consumed by
+    exactly one snapshot, so the coordinator's merge is idempotent under
+    host death: a dead host's final deltas either arrived with a buffered
+    message (salvaged) or died with the pipe — never merged twice.
     """
     if cfg.get("scrub_xla", True):
         # the parent may run under XLA_FLAGS host-device simulation; each
@@ -97,7 +107,7 @@ def _worker_main(host_id: int, conn, cfg: dict) -> None:
     try:
         while True:
             if not conn.poll(hb):
-                conn.send(("hb", host_id, time.time()))
+                conn.send(("hb", host_id, obs_clock.walltime()))
                 continue
             msg = conn.recv()
             if msg[0] == "stop":
@@ -120,10 +130,12 @@ def _worker_main(host_id: int, conn, cfg: dict) -> None:
                                  else np.asarray(res.beta)),
                         "iters": int(res.iters), "kkt": float(res.kkt),
                         "bucket": tuple(res.bucket), "status": res.status}
-                conn.send(("result", host_id, batch_id, payload))
+                conn.send(("result", host_id, batch_id, payload,
+                           sched.registry.counter_deltas()))
             except Exception:  # noqa: BLE001 — report, let the parent requeue
                 conn.send(("error", host_id, batch_id,
-                           traceback.format_exc()))
+                           traceback.format_exc(),
+                           sched.registry.counter_deltas()))
         c = sched.cache
         conn.send(("stats", host_id, {
             "requests": sched.stats.requests,
@@ -132,7 +144,8 @@ def _worker_main(host_id: int, conn, cfg: dict) -> None:
             "speculative_slots": sched.stats.speculative_slots,
             "cache_hits": getattr(c, "hits", 0),
             "cache_misses": getattr(c, "misses", 0),
-            "spill_hits": getattr(c, "spill_hits", 0)}))
+            "spill_hits": getattr(c, "spill_hits", 0)},
+            sched.registry.counter_deltas()))
     except (EOFError, BrokenPipeError, OSError):
         pass                    # parent gone: nothing left to report to
     finally:
@@ -189,8 +202,9 @@ class MultiHostCoordinator:
                  max_inflight_per_host: int = 2,
                  heartbeat_interval: float = _HB_INTERVAL_DEFAULT,
                  heartbeat_timeout: Optional[float] = None,
-                 scrub_xla: bool = True, clock=time.perf_counter,
-                 spawn_timeout: float = 120.0, start: bool = True):
+                 scrub_xla: bool = True, clock=obs_clock.monotonic,
+                 spawn_timeout: float = 120.0, start: bool = True,
+                 registry: Optional[MetricsRegistry] = None):
         if n_hosts < 1:
             raise ValueError(f"MultiHostCoordinator: n_hosts >= 1 required "
                              f"(got {n_hosts})")
@@ -203,10 +217,27 @@ class MultiHostCoordinator:
         self.heartbeat_timeout = heartbeat_timeout
         self.spawn_timeout = spawn_timeout
         self.clock = clock
-        self.metrics = LatencyRecorder()
+        self.tracer = get_tracer()
+        # three metric scopes (DESIGN.md §12.4): `registry` is the
+        # coordinator's OWN accounting (admission, terminals, failover),
+        # `fleet` is every worker's counter deltas merged, `host_registries`
+        # keeps the same deltas split per host — a dead host's view freezes
+        # at its last delivered message.
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.fleet = MetricsRegistry()
+        self.host_registries: Dict[int, MetricsRegistry] = {}
+        self.metrics = LatencyRecorder(registry=self.registry)
+        self._admitted = self.registry.counter(
+            "requests_admitted_total", "requests accepted by the coordinator")
+        self._terminal = self.registry.counter(
+            "requests_terminal_total",
+            "admitted requests by terminal status", ("status",))
+        self._requeues = self.registry.counter(
+            "batches_requeued_total",
+            "batches re-placed after a host failure or worker error")
+        self._lost = self.registry.counter(
+            "hosts_lost_total", "worker hosts declared dead")
         self.worker_stats: List[dict] = []
-        self.requeued_batches = 0
-        self.hosts_lost = 0
         self._cfg = {"max_batch": max_batch, "min_n": min_n, "min_p": min_p,
                      "cache_dir": cache_dir, "speculate": speculate,
                      "fixed_batch": fixed_batch, "scrub_xla": scrub_xla,
@@ -221,6 +252,47 @@ class MultiHostCoordinator:
         self._started = False
         if start:
             self.start()
+
+    # -- telemetry ---------------------------------------------------------
+
+    @property
+    def hosts_lost(self) -> int:
+        return int(self._lost.value())
+
+    @property
+    def requeued_batches(self) -> int:
+        return int(self._requeues.value())
+
+    def _merge_deltas(self, host_id: int, deltas: Optional[dict]) -> None:
+        """Fold one worker message's piggybacked counter deltas into the
+        fleet view and that host's view."""
+        if not deltas:
+            return
+        self.fleet.merge_counter_deltas(deltas)
+        reg = self.host_registries.setdefault(host_id, MetricsRegistry())
+        reg.merge_counter_deltas(deltas)
+
+    def metrics_snapshot(self) -> dict:
+        """Coordinator + fleet + per-host metric state as plain JSON."""
+        return {"coordinator": self.registry.snapshot(),
+                "fleet": self.fleet.snapshot(),
+                "hosts": {hid: reg.snapshot()
+                          for hid, reg in sorted(self.host_registries.items())}}
+
+    def accounting(self) -> dict:
+        """The no-silent-drops invariant as numbers (bench_obs gates it):
+        every admitted request must sit in exactly one terminal-status
+        counter once traffic has drained."""
+        terminals = {status: int(v) for (status,), v
+                     in self._terminal.series().items()}
+        admitted = int(self._admitted.value())
+        return {"admitted": admitted, "terminals": terminals,
+                "outstanding": len(self._owner) + len(self._queue_reqs()),
+                "balanced": admitted == sum(terminals.values())}
+
+    def _queue_reqs(self) -> list:
+        return ([r for b in self._queue for r in b.reqs]
+                + [r for b in self._buckets.values() for r in b])
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -321,6 +393,7 @@ class MultiHostCoordinator:
                ceil_pow2(X.shape[1], self.min_p), form)
         self._buckets.setdefault(key, []).append(req)
         self.metrics.submitted(req.req_id, now)
+        self._admitted.inc()
         if len(self._buckets[key]) >= self.max_batch:
             self._form_batches(only_full=True)
         self._pump()
@@ -374,7 +447,10 @@ class MultiHostCoordinator:
                       "lam": r.lam, "lambda2": r.lambda2,
                       "priority": r.priority} for r in batch.reqs]
             try:
-                host.conn.send(("solve", batch.batch_id, items))
+                with self.tracer.span("mh.place", host=host.host_id,
+                                      bucket=batch.key[:2],
+                                      b=len(batch.reqs), cost_s=batch.cost):
+                    host.conn.send(("solve", batch.batch_id, items))
             except (BrokenPipeError, OSError):
                 self._mark_dead(host)
                 self._queue.insert(0, batch)
@@ -399,9 +475,11 @@ class MultiHostCoordinator:
             while host.conn.poll(0):
                 msg = host.conn.recv()
                 if msg[0] == "result":
+                    self._merge_deltas(host.host_id, msg[4])
                     self._finish_batch(host, msg[2], msg[3])
                 elif msg[0] == "stats":
                     host.stats = msg[2]
+                    self._merge_deltas(host.host_id, msg[3])
         except (EOFError, OSError):
             pass
         host.dead = True
@@ -412,9 +490,12 @@ class MultiHostCoordinator:
         # a host whose FINAL stats arrived and whose slate is clean merely
         # stopped (shutdown handshake) — only count genuine failures
         if host.stats is None or lost:
-            self.hosts_lost += 1
+            self._lost.inc()
+            obs_events.emit("host_death", host=host.host_id,
+                            lost_batches=len(lost),
+                            exitcode=host.proc.exitcode)
         for batch in lost:
-            self.requeued_batches += 1
+            self._requeues.inc()
             self._requeue(batch.reqs)
 
     def _requeue(self, reqs) -> None:
@@ -432,6 +513,9 @@ class MultiHostCoordinator:
                             ceil_pow2(r.X.shape[1], self.min_p)),
                     status="deadline_exceeded")
                 self.metrics.completed([r.req_id], now)
+                self._terminal.inc(status="deadline_exceeded")
+                obs_events.emit("deadline_exceeded", req_id=r.req_id,
+                                deadline=r.deadline, now=now)
                 continue
             key = (ceil_pow2(r.X.shape[0], self.min_n),
                    ceil_pow2(r.X.shape[1], self.min_p), r.form)
@@ -443,10 +527,11 @@ class MultiHostCoordinator:
         from repro.runtime.scheduler import EnResult, ceil_pow2
 
         now = self.clock()
-        doomed = ([r for b in self._queue for r in b.reqs]
-                  + [r for b in self._buckets.values() for r in b])
+        doomed = self._queue_reqs()
         self._queue.clear()
         self._buckets.clear()
+        if doomed:
+            obs_events.emit("abort_all", n=len(doomed))
         for r in doomed:
             self._owner.pop(r.req_id, None)
             self._results[r.req_id] = EnResult(
@@ -455,6 +540,7 @@ class MultiHostCoordinator:
                         ceil_pow2(r.X.shape[1], self.min_p)),
                 status="aborted")
             self.metrics.completed([r.req_id], now)
+            self._terminal.inc(status="aborted")
 
     # -- event loop --------------------------------------------------------
 
@@ -478,15 +564,20 @@ class MultiHostCoordinator:
                 elif kind == "hb":
                     pass
                 elif kind == "result":
+                    self._merge_deltas(host.host_id, msg[4])
                     self._finish_batch(host, msg[2], msg[3])
                 elif kind == "error":
+                    self._merge_deltas(host.host_id, msg[4])
                     batch = host.outstanding.pop(msg[2], None)
                     if batch is not None:
                         host.load_s = max(0.0, host.load_s - batch.cost)
-                        self.requeued_batches += 1
+                        self._requeues.inc()
+                        obs_events.emit("requeue", host=host.host_id,
+                                        batch=msg[2])
                         self._requeue(batch.reqs)
                 elif kind == "stats":
                     host.stats = msg[2]
+                    self._merge_deltas(host.host_id, msg[3])
         now = self.clock()
         for h in self._hosts:
             if h.dead:
@@ -519,6 +610,7 @@ class MultiHostCoordinator:
                 beta=out["beta"], iters=np.int64(out["iters"]),
                 kkt=out["kkt"], bucket=tuple(out["bucket"]),
                 status=out["status"])
+            self._terminal.inc(status=out["status"])
             done.append(r.req_id)
         if done:
             self.metrics.completed(done, now)

@@ -40,7 +40,6 @@ import contextlib
 import dataclasses
 import heapq
 import math
-import time
 from typing import Dict, List, NamedTuple, Optional, Tuple
 
 import jax
@@ -51,6 +50,11 @@ from repro import dist
 from repro.core.api import EnetCarry, PathConfig, enet_batch
 from repro.core.batch import sven_batch
 from repro.core.sven import SvenConfig
+from repro.obs import clock as obs_clock
+from repro.obs import events as obs_events
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.solve import SolveLog, SolveRecord
+from repro.obs.trace import get_tracer
 from repro.runtime.cache import (CONSTRAINED, PENALIZED, SolutionCache,
                                  WarmEntry, fingerprint_problem)
 from repro.runtime.metrics import LatencyRecorder
@@ -99,20 +103,65 @@ class EnResult(NamedTuple):
     status: str = "ok"        # "ok" | "deadline_exceeded" | "aborted"
 
 
-@dataclasses.dataclass
-class RuntimeStats:
-    """Counters shared by the runtime scheduler and the engine facade."""
+#: RuntimeStats attribute -> (instrument kind, metric name, fixed labels).
+#: The attribute surface is a read-through shim (PR 9): the values live on
+#: the owning scheduler's MetricsRegistry, these names keep every existing
+#: ``stats.requests += 1`` call site and test assertion working unchanged.
+_STAT_SPECS = {
+    "requests": ("counter", "runtime_requests_total", {}),
+    "batches": ("counter", "runtime_batches_total", {}),
+    "bucket_shapes": ("gauge", "runtime_bucket_executables", {}),
+    "padded_slots": ("counter", "runtime_padded_slots_total", {}),
+    "solve_seconds": ("counter", "runtime_solve_seconds_total", {}),
+    "launched_full": ("counter", "runtime_launches_total",
+                      {"reason": "full"}),
+    "launched_deadline": ("counter", "runtime_launches_total",
+                          {"reason": "deadline"}),
+    "launched_flush": ("counter", "runtime_launches_total",
+                       {"reason": "flush"}),
+    "speculative_slots": ("counter", "runtime_speculative_slots_total", {}),
+}
 
-    requests: int = 0
-    batches: int = 0          # stacked solves dispatched
-    bucket_shapes: int = 0    # distinct (n, p, B, form) executables compiled
-    padded_slots: int = 0     # batch slots occupied by padding problems
-    solve_seconds: float = 0.0  # host time blocked in harvest()
-    launched_full: int = 0    # launches because a bucket filled
-    launched_deadline: int = 0  # launches because a deadline expired
-    launched_flush: int = 0   # launches forced by flush()/drain()
-    speculative_slots: int = 0  # padding slots repurposed as pre-solves
-    # (cache hit/miss counters live on SolutionCache itself — one owner)
+
+class RuntimeStats:
+    """Counters shared by the runtime scheduler and the engine facade.
+
+    Since PR 9 this is a thin attribute view over a `MetricsRegistry`
+    (DESIGN.md §12.2): reads and writes of the historical fields
+    (``requests``, ``batches``, ``launched_full``, ...) resolve to labeled
+    registry series, so one store feeds both the legacy attribute
+    consumers and the JSON/Prometheus exposition. Counts read back as
+    ints; ``solve_seconds`` stays a float. Cache hit/miss counters live on
+    `SolutionCache` itself — one owner.
+    """
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None) -> None:
+        object.__setattr__(self, "registry",
+                           registry if registry is not None
+                           else MetricsRegistry())
+
+    def _series(self, name: str):
+        kind, metric, labels = _STAT_SPECS[name]
+        make = (self.registry.gauge if kind == "gauge"
+                else self.registry.counter)
+        return make(metric, labelnames=tuple(labels)), labels
+
+    def __getattr__(self, name: str):
+        if name not in _STAT_SPECS:
+            raise AttributeError(name)
+        inst, labels = self._series(name)
+        v = inst.value(**labels)
+        return v if name == "solve_seconds" else int(v)
+
+    def __setattr__(self, name: str, value) -> None:
+        if name not in _STAT_SPECS:
+            raise AttributeError(f"RuntimeStats has no field {name!r}")
+        inst, labels = self._series(name)
+        inst.set(float(value), **labels)
+
+    def __repr__(self) -> str:
+        fields = ", ".join(f"{k}={getattr(self, k)}" for k in _STAT_SPECS)
+        return f"RuntimeStats({fields})"
 
 
 @dataclasses.dataclass
@@ -148,6 +197,9 @@ class _InFlight(NamedTuple):
     nu_out: jax.Array         # (B,) measured multiplier (penalized only)
     spec: tuple = ()          # ((slot, fingerprint, lam, lambda2), ...)
     #                           speculative pre-solves riding padding slots
+    t_dispatch: float = 0.0   # scheduler clock at dispatch (solve telemetry)
+    modeled_s: float = 0.0    # cost-model price of this launch (0 = unpriced)
+    route_path: str = "single"  # router decision this launch ran under
 
 
 def _urgency(req: EnRequest) -> tuple:
@@ -184,7 +236,9 @@ class ContinuousScheduler:
                  cache="default", fixed_batch: bool = False,
                  auto_launch_full: bool = True, mesh="auto",
                  route: str = "auto", speculate: bool = False,
-                 clock=time.perf_counter, dtype=jnp.float64):
+                 clock=obs_clock.monotonic, dtype=jnp.float64,
+                 registry: Optional[MetricsRegistry] = None,
+                 tracer=None):
         if max_batch < 1 or min_n < 1 or min_p < 1:
             raise ValueError(f"ContinuousScheduler: max_batch/min_n/min_p "
                              f"must be >= 1 (got {max_batch}/{min_n}/{min_p})")
@@ -197,7 +251,14 @@ class ContinuousScheduler:
         self.min_n = min_n
         self.min_p = min_p
         self.max_wait = max_wait
-        self.cache = SolutionCache() if cache == "default" else cache
+        # one registry per scheduler: stats, latency histograms and cache
+        # counters share it, so a scheduler's whole telemetry exports as a
+        # single snapshot / Prometheus page (DESIGN.md §12.2)
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else get_tracer()
+        self.solve_log = SolveLog()
+        self.cache = (SolutionCache(registry=self.registry)
+                      if cache == "default" else cache)
         # mesh="auto": OFFER the process's devices when there is more than
         # one — whether a bucket launch actually fans out is decided per
         # (shape, batch) by the core.routing cost model at dispatch. None =
@@ -225,8 +286,13 @@ class ContinuousScheduler:
         self.speculate = speculate and cache is not None
         self.clock = clock
         self.dtype = dtype
-        self.stats = RuntimeStats()
-        self.metrics = LatencyRecorder()
+        self.stats = RuntimeStats(self.registry)
+        self.metrics = LatencyRecorder(registry=self.registry)
+        # every admitted request must end in exactly ONE terminal status —
+        # the accounting invariant bench_obs gates fleet-wide
+        self._terminal = self.registry.counter(
+            "requests_terminal_total",
+            "admitted requests by terminal status", ("status",))
         self._buckets: Dict[tuple, List[EnRequest]] = {}
         self._deadlines: list = []       # heap of (deadline, req_id, key)
         self._in_flight: List[_InFlight] = []
@@ -236,6 +302,10 @@ class ContinuousScheduler:
         # (fingerprint, form, lambda2) -> (prev_lam, last_lam): the crawl
         # trail speculation extrapolates; bounded, oldest trail dropped.
         self._lam_trail: "collections.OrderedDict" = collections.OrderedDict()
+        # speculative points inserted but not yet consumed by a client
+        # lookup — consumption emits a speculation_hit event, eviction from
+        # this bounded set an (unconsumed) speculation_miss
+        self._spec_points: "collections.OrderedDict" = collections.OrderedDict()
 
     # -- admission ---------------------------------------------------------
 
@@ -278,12 +348,13 @@ class ContinuousScheduler:
                          else None))
         self._next_id += 1
         key = self.bucket_of(*X.shape) + (form,)
-        self._buckets.setdefault(key, []).append(req)
-        heapq.heappush(self._deadlines, (deadline, req.req_id, key))
-        self.stats.requests += 1
-        self.metrics.submitted(req.req_id, now)
-        if self.speculate and req.fingerprint is not None:
-            self._note_crawl(req)
+        with self.tracer.span("admit", bucket=key[:2], form=form):
+            self._buckets.setdefault(key, []).append(req)
+            heapq.heappush(self._deadlines, (deadline, req.req_id, key))
+            self.stats.requests += 1
+            self.metrics.submitted(req.req_id, now)
+            if self.speculate and req.fingerprint is not None:
+                self._note_crawl(req)
         self.poll(now)
         return req.req_id
 
@@ -335,10 +406,14 @@ class ContinuousScheduler:
                     bucket=self.bucket_of(*r.X.shape),
                     status="deadline_exceeded")
                 self.metrics.completed([r.req_id], now)
+                self._terminal.inc(status="deadline_exceeded")
+                obs_events.emit("deadline_exceeded", req_id=r.req_id,
+                                deadline=r.deadline, now=now)
                 continue
             key = self.bucket_of(*r.X.shape) + (r.form,)
             self._buckets.setdefault(key, []).append(r)
             heapq.heappush(self._deadlines, (r.deadline, r.req_id, key))
+            obs_events.emit("requeue", req_id=r.req_id, bucket=key[:2])
 
     # -- event loop --------------------------------------------------------
 
@@ -447,7 +522,9 @@ class ContinuousScheduler:
         else:
             del self._buckets[key]
         try:
-            inf = self._dispatch(key, chunk)
+            with self.tracer.span("launch", reason=reason, bucket=key[:2],
+                                  form=key[2], b_real=len(chunk)):
+                inf = self._dispatch(key, chunk)
         except Exception:
             # a failed dispatch must not lose the queue: requeue the chunk
             # (which completes already-expired requests as
@@ -476,12 +553,24 @@ class ContinuousScheduler:
         nu_prev = np.zeros((b_pad,), self.dtype)
         hot = np.zeros((b_pad,), bool)
         if self.cache is not None:
-            for i, r in enumerate(reqs):
-                entry = self.cache.lookup(r.fingerprint, form, r.lam, r.lambda2)
-                if entry is not None:
-                    alpha[i], w[i], beta[i] = entry.alpha, entry.w, entry.beta
-                    t_prev[i], nu_prev[i] = entry.t, entry.nu
-                    hot[i] = True
+            with self.tracer.span("warm_start", b=len(reqs)) as sp:
+                for i, r in enumerate(reqs):
+                    entry = self.cache.lookup(r.fingerprint, form, r.lam,
+                                              r.lambda2)
+                    if entry is not None:
+                        alpha[i], w[i], beta[i] = (entry.alpha, entry.w,
+                                                   entry.beta)
+                        t_prev[i], nu_prev[i] = entry.t, entry.nu
+                        hot[i] = True
+                        skey = (r.fingerprint, form, entry.lam, entry.lambda2)
+                        if self._spec_points.pop(skey, None) is not None:
+                            # a pre-solved padding-slot point served a real
+                            # client request — speculation paid off
+                            obs_events.emit("speculation_hit",
+                                            lam=entry.lam,
+                                            lambda2=entry.lambda2)
+                if sp.args is not None:
+                    sp.args["hits"] = int(hot[:len(reqs)].sum())
         return alpha, w, beta, t_prev, nu_prev, hot
 
     def _predict_candidates(self, reqs, form: str) -> list:
@@ -534,6 +623,14 @@ class ContinuousScheduler:
                 wt[slot], wnu[slot] = entry.t, entry.nu
                 hot[slot] = True
             spec.append((slot, r.fingerprint, float(pred), r.lambda2))
+            # remember the prediction: a later warm-start hit on exactly
+            # this point is a speculation_hit; falling off the bounded set
+            # unconsumed is a speculation_miss (the crawl went elsewhere)
+            self._spec_points[(r.fingerprint, form, float(pred),
+                               r.lambda2)] = True
+            while len(self._spec_points) > 1024:
+                old, _ = self._spec_points.popitem(last=False)
+                obs_events.emit("speculation_miss", lam=old[2], lambda2=old[3])
         self.stats.speculative_slots += len(spec)
         return tuple(spec)
 
@@ -551,6 +648,7 @@ class ContinuousScheduler:
         mesh does not divide — still apply and fall back to one device)."""
         bn, bp, form = key
         b_real = len(reqs)
+        t_disp = self.clock()
         cands = (self._predict_candidates(reqs, form)
                  if self.speculate else [])
         if self.fixed_batch:
@@ -573,16 +671,30 @@ class ContinuousScheduler:
             spec = self._fill_spec_slots(cands, key, b_real, Xb, yb, lamb,
                                          l2b, wa, ww, wb, wt, wnu, hot)
 
+        route_form = "penalized" if form == PENALIZED else "constrained"
         mesh = self.mesh
+        modeled_s = 0.0
+        route_path = "single"
         if (mesh is not None and not self._mesh_pinned
                 and self.route != "batch"):
             from repro.core import routing
-            decision = routing.route_batch(
-                bn, bp, b_pad, mesh,
-                form="penalized" if form == PENALIZED else "constrained",
-                route=self.route)
+            decision = routing.route_batch(bn, bp, b_pad, mesh,
+                                           form=route_form, route=self.route)
+            self.tracer.instant("route", path=decision.path,
+                                costs=dict(decision.costs),
+                                reason=decision.reason)
+            route_path = decision.path
+            modeled_s = float(decision.costs.get(decision.path, 0.0))
             if decision.path != "batch":
                 mesh = None
+        elif mesh is None:
+            # single device by construction: nothing to route, but the
+            # solve telemetry still wants the model's price for this launch
+            from repro.core import routing
+            modeled_s = float(routing.estimate_batch_seconds(
+                bn, bp, b_pad, form=route_form))
+        else:
+            route_path = "batch"    # pinned mesh / route="batch": unpriced
         ctx = (dist.mesh_context(mesh) if mesh is not None
                else contextlib.nullcontext())
         route = "batch" if mesh is not None else "auto"
@@ -595,14 +707,16 @@ class ContinuousScheduler:
                 inf = _InFlight(key=key, reqs=tuple(reqs), beta=pts.beta,
                                 iters=pts.sven_iters, kkt=pts.kkt,
                                 alpha=carry.alpha, w=carry.w, t_out=pts.t,
-                                nu_out=pts.nu, spec=spec)
+                                nu_out=pts.nu, spec=spec, t_dispatch=t_disp,
+                                modeled_s=modeled_s, route_path=route_path)
             else:
                 sol = sven_batch(Xb, yb, lamb, l2b, self.config,
                                  warm_alpha=wa, warm_w=ww, route=route)
                 inf = _InFlight(key=key, reqs=tuple(reqs), beta=sol.beta,
                                 iters=sol.iters, kkt=sol.kkt, alpha=sol.alpha,
                                 w=sol.w, t_out=lamb, nu_out=jnp.zeros_like(lamb),
-                                spec=spec)
+                                spec=spec, t_dispatch=t_disp,
+                                modeled_s=modeled_s, route_path=route_path)
         self.stats.padded_slots += b_pad - b_real
         self._seen_shapes.add((bn, bp, b_pad, form))
         self.stats.bucket_shapes = len(self._seen_shapes)
@@ -616,29 +730,57 @@ class ContinuousScheduler:
         The stacked device arrays are pulled to host ONCE and sliced in
         numpy — per-request eager `Array.__getitem__` costs more dispatch
         time than the solves themselves at serving batch sizes."""
-        t0 = self.clock()
-        jax.block_until_ready(inf.beta)
-        self.stats.solve_seconds += self.clock() - t0
-        beta, iters, kkt, alpha, w, t_out, nu_out = (
-            np.asarray(a) for a in (inf.beta, inf.iters, inf.kkt, inf.alpha,
-                                    inf.w, inf.t_out, inf.nu_out))
         bn, bp, form = inf.key
-        for i, req in enumerate(inf.reqs):
-            p = req.X.shape[1]
-            self._results[req.req_id] = EnResult(
-                beta=beta[i, :p], iters=iters[i], kkt=kkt[i], bucket=(bn, bp))
+        with self.tracer.span("complete", bucket=(bn, bp),
+                              b_real=len(inf.reqs)):
+            t0 = self.clock()
+            with self.tracer.span("harvest.block"):
+                jax.block_until_ready(inf.beta)
+            blocked = self.clock() - t0
+            self.stats.solve_seconds += blocked
+            beta, iters, kkt, alpha, w, t_out, nu_out = (
+                np.asarray(a) for a in (inf.beta, inf.iters, inf.kkt,
+                                        inf.alpha, inf.w, inf.t_out,
+                                        inf.nu_out))
+            for i, req in enumerate(inf.reqs):
+                p = req.X.shape[1]
+                self._results[req.req_id] = EnResult(
+                    beta=beta[i, :p], iters=iters[i], kkt=kkt[i],
+                    bucket=(bn, bp))
+                if self.cache is not None:
+                    self.cache.insert(req.fingerprint, form, WarmEntry(
+                        lam=req.lam, lambda2=req.lambda2, alpha=alpha[i],
+                        w=w[i], beta=beta[i], t=t_out[i], nu=nu_out[i]))
             if self.cache is not None:
-                self.cache.insert(req.fingerprint, form, WarmEntry(
-                    lam=req.lam, lambda2=req.lambda2, alpha=alpha[i],
-                    w=w[i], beta=beta[i], t=t_out[i], nu=nu_out[i]))
-        if self.cache is not None:
-            # speculative slots: nobody asked for these yet — the whole
-            # point is that the NEXT step of the crawl finds them warm
-            for slot, fp, lam, lam2 in inf.spec:
-                self.cache.insert(fp, form, WarmEntry(
-                    lam=lam, lambda2=lam2, alpha=alpha[slot], w=w[slot],
-                    beta=beta[slot], t=t_out[slot], nu=nu_out[slot]))
-        self.metrics.completed([r.req_id for r in inf.reqs], self.clock())
+                # speculative slots: nobody asked for these yet — the whole
+                # point is that the NEXT step of the crawl finds them warm
+                for slot, fp, lam, lam2 in inf.spec:
+                    self.cache.insert(fp, form, WarmEntry(
+                        lam=lam, lambda2=lam2, alpha=alpha[slot], w=w[slot],
+                        beta=beta[slot], t=t_out[slot], nu=nu_out[slot]))
+            now = self.clock()
+            self.metrics.completed([r.req_id for r in inf.reqs], now)
+            # nothing past this point can raise: a harvest retry after a
+            # cache/unpad failure must not double-count terminals or solves
+            self._terminal.inc(len(inf.reqs), status="ok")
+            nnz = 0
+            dim = 0
+            for i, req in enumerate(inf.reqs):
+                p = req.X.shape[1]
+                nnz += int(np.count_nonzero(np.abs(beta[i, :p]) > 1e-12))
+                dim += p
+            b_real = len(inf.reqs)
+            real_iters = iters[:b_real]
+            self.solve_log.add(SolveRecord(
+                bucket=(bn, bp), form=form, batch=int(beta.shape[0]),
+                b_real=b_real, route_path=inf.route_path,
+                modeled_s=inf.modeled_s,
+                actual_s=(now - inf.t_dispatch if inf.t_dispatch > 0.0
+                          else blocked),
+                blocked_s=blocked, iters_max=int(real_iters.max(initial=0)),
+                iters_mean=float(real_iters.mean()) if b_real else 0.0,
+                kkt_max=float(kkt[:b_real].max(initial=0.0)),
+                keep_fraction=nnz / dim if dim else 0.0))
 
 
 def _batch_ready(inf: _InFlight) -> bool:

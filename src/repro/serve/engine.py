@@ -31,7 +31,6 @@ parity oracle the runtime is tested and benchmarked against
 """
 from __future__ import annotations
 
-import time
 from typing import Optional
 
 import jax
@@ -154,6 +153,12 @@ class ElasticNetEngine:
         return self._scheduler.stats
 
     @property
+    def registry(self):
+        """The scheduler's MetricsRegistry — the engine's whole telemetry
+        (stats, cache counters, latency histograms) in one snapshot."""
+        return self._scheduler.registry
+
+    @property
     def cache(self) -> Optional[SolutionCache]:
         return self._scheduler.cache
 
@@ -240,7 +245,7 @@ class ElasticNetEngine:
         lamb = jnp.asarray([r.lam for r in reqs] + fill, self.dtype)
         l2b = jnp.asarray([r.lambda2 for r in reqs] + fill, self.dtype)
 
-        t0 = time.perf_counter()
+        t0 = sched.clock()
         if pen:
             pts = jax.block_until_ready(
                 enet_batch(Xb, yb, lamb, l2b, self.path_config))
@@ -249,7 +254,7 @@ class ElasticNetEngine:
             sol = jax.block_until_ready(
                 sven_batch(Xb, yb, lamb, l2b, self.config))
             betas, iters, kkts = sol.beta, sol.iters, sol.kkt
-        now = time.perf_counter()
+        now = sched.clock()
         sched.stats.solve_seconds += now - t0
         sched.stats.batches += 1
         sched.stats.padded_slots += b_pad - b_real

@@ -1,0 +1,55 @@
+#!/usr/bin/env python
+"""Timing-discipline lint (DESIGN.md §12.1): the serving runtime must take
+every timestamp through `repro.obs.clock`.
+
+Rejects bare ``time.time()`` / ``time.perf_counter()`` /
+``time.perf_counter_ns()`` call sites inside ``src/repro/runtime/`` — mixed
+clock sources are how latency accounting silently breaks (a monotonic
+launch instant subtracted from a walltime completion instant is garbage,
+and the bug only shows up as impossible percentiles much later).
+``time.sleep`` and the `obs` aliases themselves stay legal; `repro/obs/`
+is where the aliases live and is excluded by construction.
+
+Usage: ``python tools/check_timing.py`` — exits 1 and prints offending
+lines when the discipline is violated. Wired into CI and `tests/test_obs.py`.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+#: bare-clock call sites; `time.sleep`, `time.monotonic` via obs aliases etc.
+#: are matched narrowly on purpose — this lint pins CLOCK READS only.
+_PATTERN = re.compile(r"\btime\.(time|perf_counter)(_ns)?\s*\(")
+
+#: runtime files allowed to say "time.<clock>" in comments/docstrings only —
+#: none currently; the regex intentionally also flags strings/comments so
+#: the rule stays greppable and zero-config.
+_SCOPE = "src/repro/runtime"
+
+
+def find_violations(root: Path) -> list:
+    out = []
+    for path in sorted((root / _SCOPE).rglob("*.py")):
+        for lineno, line in enumerate(path.read_text().splitlines(), 1):
+            if _PATTERN.search(line):
+                out.append((path.relative_to(root), lineno, line.strip()))
+    return out
+
+
+def main() -> int:
+    root = Path(__file__).resolve().parent.parent
+    violations = find_violations(root)
+    for path, lineno, line in violations:
+        print(f"{path}:{lineno}: bare clock call (use repro.obs.clock): "
+              f"{line}")
+    if violations:
+        print(f"check_timing: {len(violations)} violation(s) in {_SCOPE}/")
+        return 1
+    print(f"check_timing: OK ({_SCOPE}/ reads clocks via repro.obs.clock)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
