@@ -243,14 +243,16 @@ def main() -> None:
                          "skipped when the file is absent")
     args = ap.parse_args()
     fname = args.artifact
-    artifact = json.load(open(fname))
+    with open(fname) as fh:
+        artifact = json.load(fh)
     errors = validate(artifact)
     if errors:
         for e in errors:
             print(f"[validate_artifact] FAIL: {e}")
         sys.exit(1)
     if os.path.exists(args.baseline):
-        warnings = compare_baseline(artifact, json.load(open(args.baseline)))
+        with open(args.baseline) as fh:
+            warnings = compare_baseline(artifact, json.load(fh))
         for w in warnings:
             print(f"[validate_artifact] WARN: {w}")
         if not warnings:

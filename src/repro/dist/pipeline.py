@@ -56,6 +56,9 @@ def pipeline_apply(mesh: Mesh, stage_fn, params, x, *, axis: str = "pipe"):
             write = jnp.logical_and(s == last, m_out >= 0)
             slot = jnp.clip(m_out, 0, n_mb - 1)
             out_buf = out_buf.at[slot].add(jnp.where(write, out, 0))
+            # reprolint: disable=COL001 -- one ring ppermute per tick IS the
+            # GPipe schedule: stage s hands microbatch t to stage s+1 each
+            # step; there is nothing to hoist (audited in PR 1, DESIGN.md §4)
             state = jax.lax.ppermute(out, axis, ring)
             return state, out_buf
 

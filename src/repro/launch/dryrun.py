@@ -362,7 +362,8 @@ def main(argv=None):
                 path = _path(args.out, a, s, mesh_tag)
                 if os.path.exists(path) and not args.force:
                     try:
-                        cached = json.load(open(path))
+                        with open(path) as fh:
+                            cached = json.load(fh)
                     except Exception:  # noqa: BLE001
                         cached = {"status": "error"}
                     if cached.get("status") != "error":

@@ -1,9 +1,10 @@
 """Canonical clocks for the serving stack (DESIGN.md §12.1).
 
 Every timestamp the runtime takes goes through these names — a CI lint
-(`tools/check_timing.py`) rejects new bare ``time.time()`` /
-``time.perf_counter()`` call sites inside ``src/repro/runtime/`` so the
-choice of clock stays a single, auditable decision:
+(reprolint rule TIM001; `tools/check_timing.py` is its deprecated shim)
+rejects new bare ``time.time()`` / ``time.perf_counter()`` call sites
+inside ``src/repro/runtime/`` so the choice of clock stays a single,
+auditable decision:
 
     monotonic     durations and deadlines (never jumps backward);
     monotonic_ns  the tracer's span clock (integer ns, cheapest to take);

@@ -735,6 +735,9 @@ class ContinuousScheduler:
                               b_real=len(inf.reqs)):
             t0 = self.clock()
             with self.tracer.span("harvest.block"):
+                # reprolint: disable=SYN002 -- THE sanctioned harvest site
+                # (DESIGN.md §8): the runtime's single block point, one per
+                # bucket chunk, after which the numpy pulls below are free
                 jax.block_until_ready(inf.beta)
             blocked = self.clock() - t0
             self.stats.solve_seconds += blocked

@@ -7,8 +7,9 @@ bounded event ring, and their integration into the serving runtime — the
 stats/cache shims stay equal to the registry they now read through, every
 admitted request lands in exactly one terminal-status counter, and the
 fleet-merged worker counters survive a SIGKILL without double counting.
-The timing-discipline lint (tools/check_timing.py) runs as a test so a
-bare ``time.time()`` in runtime/ fails here before it fails CI.
+The timing-discipline lint (reprolint rule TIM001, formerly
+tools/check_timing.py) runs as a test so a bare ``time.time()`` in
+runtime/ fails here before it fails CI.
 """
 import json
 import os
@@ -17,7 +18,7 @@ import sys
 import numpy as np
 import pytest
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tools"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from repro.data.synthetic import make_regression
 from repro.obs import (EventLog, MetricsRegistry, SolveLog, SolveRecord,
@@ -342,10 +343,12 @@ def test_tracing_overhead_within_budget():
 # ---------------------------------------------------------------------------
 
 def test_runtime_has_no_bare_clock_reads():
-    import check_timing
-    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     from pathlib import Path
-    violations = check_timing.find_violations(Path(root))
-    assert violations == [], (
+
+    from tools.reprolint import load_config, run_paths
+    root = Path(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    res = run_paths(root, ["src/repro/runtime"], load_config(root),
+                    select=("TIM001",))
+    assert res.findings == [], (
         "bare time.time()/time.perf_counter() in src/repro/runtime/ — "
-        f"route clock reads through repro.obs.clock: {violations}")
+        f"route clock reads through repro.obs.clock: {res.findings}")

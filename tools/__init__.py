@@ -1,0 +1,1 @@
+# Makes `python -m tools.reprolint` resolvable from the repo root.

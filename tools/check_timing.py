@@ -1,46 +1,39 @@
 #!/usr/bin/env python
-"""Timing-discipline lint (DESIGN.md §12.1): the serving runtime must take
-every timestamp through `repro.obs.clock`.
+"""DEPRECATED shim: the timing-discipline lint is now reprolint rule TIM001.
 
-Rejects bare ``time.time()`` / ``time.perf_counter()`` /
-``time.perf_counter_ns()`` call sites inside ``src/repro/runtime/`` — mixed
-clock sources are how latency accounting silently breaks (a monotonic
-launch instant subtracted from a walltime completion instant is garbage,
-and the bug only shows up as impossible percentiles much later).
-``time.sleep`` and the `obs` aliases themselves stay legal; `repro/obs/`
-is where the aliases live and is excluded by construction.
-
-Usage: ``python tools/check_timing.py`` — exits 1 and prints offending
-lines when the discipline is violated. Wired into CI and `tests/test_obs.py`.
+Use ``python -m tools.reprolint src --select TIM001`` (or just run the full
+suite). This entry point and `find_violations` stay for callers of the PR 9
+interface; both delegate to the AST-based rule, which — unlike the old
+regex — no longer flags clock mentions inside comments or docstrings.
 """
 from __future__ import annotations
 
-import re
 import sys
 from pathlib import Path
 
-#: bare-clock call sites; `time.sleep`, `time.monotonic` via obs aliases etc.
-#: are matched narrowly on purpose — this lint pins CLOCK READS only.
-_PATTERN = re.compile(r"\btime\.(time|perf_counter)(_ns)?\s*\(")
+_REPO_ROOT = Path(__file__).resolve().parent.parent
+if str(_REPO_ROOT) not in sys.path:  # script/`import check_timing` runs
+    sys.path.insert(0, str(_REPO_ROOT))
 
-#: runtime files allowed to say "time.<clock>" in comments/docstrings only —
-#: none currently; the regex intentionally also flags strings/comments so
-#: the rule stays greppable and zero-config.
+from tools.reprolint import LintConfig, run_paths  # noqa: E402
+
 _SCOPE = "src/repro/runtime"
 
 
 def find_violations(root: Path) -> list:
+    """PR 9-compatible surface: [(relpath, lineno, source line), ...]."""
+    res = run_paths(Path(root), [_SCOPE], LintConfig(), select=("TIM001",))
     out = []
-    for path in sorted((root / _SCOPE).rglob("*.py")):
-        for lineno, line in enumerate(path.read_text().splitlines(), 1):
-            if _PATTERN.search(line):
-                out.append((path.relative_to(root), lineno, line.strip()))
+    for f in res.findings:
+        line = (Path(root) / f.path).read_text().splitlines()[f.line - 1]
+        out.append((Path(f.path), f.line, line.strip()))
     return out
 
 
 def main() -> int:
-    root = Path(__file__).resolve().parent.parent
-    violations = find_violations(root)
+    print("check_timing: deprecated — running `python -m tools.reprolint "
+          f"{_SCOPE} --select TIM001` instead", file=sys.stderr)
+    violations = find_violations(_REPO_ROOT)
     for path, lineno, line in violations:
         print(f"{path}:{lineno}: bare clock call (use repro.obs.clock): "
               f"{line}")

@@ -1,0 +1,134 @@
+"""Configuration: ``[tool.reprolint]`` in the project's pyproject.toml.
+
+Two knobs, both path-based (posix, repo-relative prefixes or fnmatch
+patterns):
+
+    [tool.reprolint]
+    exclude = ["generated"]              # never lint these paths at all
+
+    [tool.reprolint.rules.COL001]
+    exclude = ["src/repro/core/distributed.py"]   # audited collective sites
+
+    [tool.reprolint.rules.TRC002]
+    include = ["src/repro/core"]         # rule runs ONLY under these paths
+
+A per-rule table *replaces* the key it sets and inherits the rule's
+built-in default for the key it doesn't: setting only ``exclude`` keeps
+the default ``include`` scope.
+
+TOML loading prefers stdlib ``tomllib`` (3.11+), falls back to ``tomli``
+(a pytest transitive dependency on 3.10, so present in every dev env),
+and finally to a tiny subset parser that understands exactly the shapes
+above — reprolint must stay runnable with zero installs.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from fnmatch import fnmatch
+from pathlib import Path
+from typing import Dict, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class RuleOverride:
+    """Per-rule scope override; None means "keep the rule's default"."""
+    include: Optional[Tuple[str, ...]] = None
+    exclude: Optional[Tuple[str, ...]] = None
+
+
+@dataclass(frozen=True)
+class LintConfig:
+    exclude: Tuple[str, ...] = ()
+    rules: Dict[str, RuleOverride] = field(default_factory=dict)
+
+
+def _path_matches(relpath: str, pattern: str) -> bool:
+    """Prefix match on path components, or fnmatch for glob patterns."""
+    pattern = pattern.rstrip("/")
+    if relpath == pattern or relpath.startswith(pattern + "/"):
+        return True
+    return fnmatch(relpath, pattern)
+
+
+def path_excluded(cfg: LintConfig, relpath: str) -> bool:
+    return any(_path_matches(relpath, p) for p in cfg.exclude)
+
+
+def rule_applies(cfg: LintConfig, rule_meta, relpath: str) -> bool:
+    """Does `rule_meta`'s scope (after config overrides) cover `relpath`?"""
+    ov = cfg.rules.get(rule_meta.id, RuleOverride())
+    include = ov.include if ov.include is not None else rule_meta.default_include
+    exclude = ov.exclude if ov.exclude is not None else rule_meta.default_exclude
+    if include is not None and not any(_path_matches(relpath, p) for p in include):
+        return False
+    return not any(_path_matches(relpath, p) for p in exclude)
+
+
+def _load_toml(text: str) -> dict:
+    try:
+        import tomllib
+        return tomllib.loads(text)
+    except ModuleNotFoundError:
+        pass
+    try:
+        import tomli
+        return tomli.loads(text)
+    except ModuleNotFoundError:
+        pass
+    return _parse_toml_subset(text)
+
+
+def _parse_toml_subset(text: str) -> dict:
+    """Last-resort parser for the flat table/str/list-of-str/bool subset
+    reprolint's own config uses. NOT a general TOML parser."""
+    doc: dict = {}
+    table = doc
+    for raw in text.splitlines():
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        m = re.fullmatch(r"\[([^\]]+)\]", line)
+        if m:
+            table = doc
+            for part in _split_table_key(m.group(1)):
+                table = table.setdefault(part, {})
+            continue
+        if "=" not in line:
+            continue
+        key, _, val = line.partition("=")
+        key = key.strip().strip('"')
+        table[key] = _parse_value(val.strip())
+    return doc
+
+
+def _split_table_key(key: str):
+    # handles bare keys and quoted dotted segments: a.b."c.d"
+    return [p.strip().strip('"') for p in re.findall(r'"[^"]*"|[^.]+', key)]
+
+
+def _parse_value(val: str):
+    if val.startswith("["):
+        return [v.strip().strip('"').strip("'")
+                for v in val.strip("[]").split(",") if v.strip()]
+    if val in ("true", "false"):
+        return val == "true"
+    return val.strip('"').strip("'")
+
+
+def load_config(root: Path) -> LintConfig:
+    """Read ``[tool.reprolint]`` from `root`/pyproject.toml (missing file
+    or section -> all-defaults config)."""
+    pyproject = root / "pyproject.toml"
+    if not pyproject.is_file():
+        return LintConfig()
+    doc = _load_toml(pyproject.read_text(encoding="utf-8"))
+    section = doc.get("tool", {}).get("reprolint", {})
+    if not section:
+        return LintConfig()
+    rules = {}
+    for rid, table in section.get("rules", {}).items():
+        rules[rid] = RuleOverride(
+            include=tuple(table["include"]) if "include" in table else None,
+            exclude=tuple(table["exclude"]) if "exclude" in table else None)
+    return LintConfig(exclude=tuple(section.get("exclude", ())), rules=rules)

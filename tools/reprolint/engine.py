@@ -1,0 +1,305 @@
+"""Lint engine: parse, shared AST services, suppressions, runner, output.
+
+`FileContext` is the shared visitor infrastructure every rule builds on:
+
+  - ``resolve(node)``   canonical dotted name of a Name/Attribute chain with
+                        import aliases folded in — ``jnp.zeros(...)`` and
+                        ``jax.numpy.zeros(...)`` both resolve to
+                        ``"jax.numpy.zeros"``, ``from jax import lax`` makes
+                        ``lax.psum`` resolve to ``"jax.lax.psum"``.
+  - ``parent(node)``    lazily-built child -> parent map over the tree.
+  - ``calls()``         every ``ast.Call`` in the file.
+  - ``enclosing_function(node)``  nearest FunctionDef/AsyncFunctionDef/Lambda.
+
+Suppressions are line comments::
+
+    x = risky()  # reprolint: disable=ATM001 -- export path, not a cache tier
+
+A suppression on its own line applies to the next line. The justification
+after ``--`` is MANDATORY: a bare ``# reprolint: disable=X`` is itself a
+finding (SUP001) — the repo's contract is that every suppression records
+*why* the invariant does not apply at that site.
+
+Exit-code contract (see `__main__`): 0 clean, 1 findings, 2 internal/usage
+error (including unparseable files — everything under lint must parse).
+"""
+from __future__ import annotations
+
+import ast
+import json
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from .config import LintConfig, path_excluded, rule_applies
+from .registry import all_rules
+
+SCHEMA_VERSION = 1
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*reprolint:\s*disable=([A-Za-z0-9_, ]+?)\s*(?:--\s*(\S.*))?$")
+
+
+@dataclass(frozen=True)
+class Finding:
+    path: str        # posix repo-relative
+    line: int        # 1-based
+    col: int         # 0-based
+    rule: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+
+@dataclass(frozen=True)
+class Suppression:
+    line: int                 # line the comment PHYSICALLY sits on
+    applies_to: int           # line whose findings it silences
+    rules: Tuple[str, ...]
+    reason: Optional[str]
+
+
+class FileContext:
+    """One parsed file plus the shared AST services rules lean on."""
+
+    def __init__(self, relpath: str, source: str):
+        self.relpath = relpath
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=relpath)
+        self.aliases = self._collect_aliases()
+        self._parents: Optional[Dict[ast.AST, ast.AST]] = None
+
+    # -- import-alias resolution -------------------------------------------
+    def _collect_aliases(self) -> Dict[str, str]:
+        amap: Dict[str, str] = {}
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    amap[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0])
+            elif isinstance(node, ast.ImportFrom) and node.module and not node.level:
+                for a in node.names:
+                    amap[a.asname or a.name] = f"{node.module}.{a.name}"
+        return amap
+
+    def resolve(self, node: ast.AST) -> Optional[str]:
+        """Canonical dotted name for a Name/Attribute chain, else None."""
+        parts: List[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        parts.append(self.aliases.get(node.id, node.id))
+        return ".".join(reversed(parts))
+
+    # -- tree services ------------------------------------------------------
+    def parent(self, node: ast.AST) -> Optional[ast.AST]:
+        if self._parents is None:
+            self._parents = {}
+            for p in ast.walk(self.tree):
+                for c in ast.iter_child_nodes(p):
+                    self._parents[c] = p
+        return self._parents.get(node)
+
+    def calls(self) -> Iterable[ast.Call]:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Call):
+                yield node
+
+    def enclosing_function(self, node: ast.AST):
+        cur = self.parent(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                return cur
+            cur = self.parent(cur)
+        return None
+
+    def contains_call_to(self, node: ast.AST, prefixes: Tuple[str, ...]) -> bool:
+        """True when `node`'s subtree calls any dotted name matching the
+        prefixes (exact id, or `prefix.*` for entries ending in '.')."""
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                name = self.resolve(sub.func)
+                if name and _name_matches(name, prefixes):
+                    return True
+        return False
+
+    # -- suppressions -------------------------------------------------------
+    def _comment_lines(self) -> List[Tuple[int, str, bool]]:
+        """(line, comment text, standalone?) for every REAL comment token —
+        tokenize, not string matching, so a directive quoted inside a
+        docstring is documentation, not a live suppression."""
+        import io
+        import tokenize
+        out = []
+        try:
+            for tok in tokenize.generate_tokens(io.StringIO(self.source).readline):
+                if tok.type == tokenize.COMMENT:
+                    line = tok.start[0]
+                    standalone = self.lines[line - 1].lstrip().startswith("#")
+                    out.append((line, tok.string, standalone))
+        except tokenize.TokenError:  # pragma: no cover - tree already parsed
+            pass
+        return out
+
+    def suppressions(self) -> List[Suppression]:
+        out = []
+        for lineno, text, standalone in self._comment_lines():
+            m = _SUPPRESS_RE.search(text)
+            if not m:
+                continue
+            rules = tuple(r.strip() for r in m.group(1).split(",") if r.strip())
+            applies_to = lineno
+            if standalone:
+                # a standalone directive covers the next CODE line, so the
+                # justification may continue over further comment lines
+                applies_to = lineno + 1
+                while applies_to <= len(self.lines) and (
+                        not self.lines[applies_to - 1].strip()
+                        or self.lines[applies_to - 1].lstrip().startswith("#")):
+                    applies_to += 1
+            out.append(Suppression(
+                line=lineno,
+                applies_to=applies_to,
+                rules=rules,
+                reason=(m.group(2) or "").strip() or None))
+        return out
+
+
+def _name_matches(name: str, prefixes: Tuple[str, ...]) -> bool:
+    for p in prefixes:
+        if p.endswith("."):
+            if name.startswith(p):
+                return True
+        elif name == p:
+            return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# running
+# ---------------------------------------------------------------------------
+
+@dataclass
+class LintResult:
+    findings: List[Finding] = field(default_factory=list)
+    suppressed: List[Finding] = field(default_factory=list)
+    suppressions: List[Tuple[str, Suppression]] = field(default_factory=list)
+    files_scanned: int = 0
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+    def counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for f in self.findings:
+            out[f.rule] = out.get(f.rule, 0) + 1
+        return dict(sorted(out.items()))
+
+
+def lint_source(source: str, relpath: str, cfg: LintConfig = LintConfig(),
+                select: Optional[Tuple[str, ...]] = None) -> LintResult:
+    """Lint one in-memory file. `relpath` drives rule scoping, so fixture
+    tests can place a snippet "inside" src/repro/runtime/ without touching
+    disk."""
+    res = LintResult(files_scanned=1)
+    if path_excluded(cfg, relpath):
+        return res
+    ctx = FileContext(relpath, source)
+    sups = ctx.suppressions()
+    raw: List[Finding] = []
+    for rid, rule in all_rules().items():
+        if select is not None and rid not in select:
+            continue
+        if not rule_applies(cfg, rule.meta, relpath):
+            continue
+        for hit in rule.check(ctx):
+            raw.append(Finding(relpath, hit.line, hit.col, rid, hit.message))
+    # SUP001 is framework-level: a suppression with no justification.
+    if select is None or "SUP001" in select:
+        for s in sups:
+            if s.reason is None:
+                raw.append(Finding(
+                    relpath, s.line, 0, "SUP001",
+                    "suppression without justification — append "
+                    "'-- <why this site is exempt>'"))
+    for f in sorted(raw, key=lambda f: (f.line, f.col, f.rule)):
+        silenced = any(s.applies_to == f.line and f.rule in s.rules
+                       for s in sups)
+        (res.suppressed if silenced else res.findings).append(f)
+    res.suppressions = [(relpath, s) for s in sups]
+    return res
+
+
+def iter_py_files(root: Path, paths: Iterable[str]) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        target = (root / p) if not Path(p).is_absolute() else Path(p)
+        if target.is_file() and target.suffix == ".py":
+            out.append(target)
+        elif target.is_dir():
+            out.extend(f for f in sorted(target.rglob("*.py"))
+                       if not any(part.startswith(".") for part in
+                                  f.relative_to(root).parts))
+    return out
+
+
+def run_paths(root: Path, paths: Iterable[str], cfg: LintConfig,
+              select: Optional[Tuple[str, ...]] = None) -> LintResult:
+    total = LintResult()
+    for f in iter_py_files(root, paths):
+        relpath = f.relative_to(root).as_posix()
+        if path_excluded(cfg, relpath):
+            continue
+        one = lint_source(f.read_text(encoding="utf-8"), relpath, cfg, select)
+        total.findings.extend(one.findings)
+        total.suppressed.extend(one.suppressed)
+        total.suppressions.extend(one.suppressions)
+        total.files_scanned += 1
+    return total
+
+
+# ---------------------------------------------------------------------------
+# output
+# ---------------------------------------------------------------------------
+
+def render_text(res: LintResult) -> str:
+    lines = [f.render() for f in res.findings]
+    counts = res.counts()
+    if counts:
+        summary = ", ".join(f"{k}: {v}" for k, v in counts.items())
+        lines.append(f"reprolint: {len(res.findings)} finding(s) "
+                     f"[{summary}] in {res.files_scanned} file(s)")
+    else:
+        lines.append(f"reprolint: OK ({res.files_scanned} file(s), "
+                     f"{len(res.suppressed)} suppressed)")
+    return "\n".join(lines)
+
+
+def render_json(res: LintResult, *, root: str, paths: List[str]) -> str:
+    rules = {rid: r.meta.summary for rid, r in all_rules().items()}
+    rules["SUP001"] = "suppression comments must carry a justification"
+    doc = {
+        "version": SCHEMA_VERSION,
+        "tool": "reprolint",
+        "root": root,
+        "paths": paths,
+        "rules": rules,
+        "files_scanned": res.files_scanned,
+        "ok": res.ok,
+        "counts": res.counts(),
+        "findings": [{"path": f.path, "line": f.line, "col": f.col,
+                      "rule": f.rule, "message": f.message}
+                     for f in res.findings],
+        "suppressed": [{"path": f.path, "line": f.line, "rule": f.rule}
+                       for f in res.suppressed],
+        "suppressions": [{"path": p, "line": s.line, "rules": list(s.rules),
+                          "reason": s.reason}
+                         for p, s in res.suppressions],
+    }
+    return json.dumps(doc, indent=1, sort_keys=True)

@@ -1,0 +1,60 @@
+"""Rule registry: every lint rule registers itself here at import time.
+
+A rule is a class with a `meta` (`RuleMeta`) describing its id, the
+invariant it encodes, and its *default* path scope, plus a
+``check(ctx) -> Iterable[RawFinding]`` generator over one parsed file
+(`engine.FileContext`). Default scopes are repo conventions baked into
+code; `pyproject.toml` ``[tool.reprolint.rules.<ID>]`` tables override
+them per directory (see `config.py`).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, Iterator, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class RawFinding:
+    """A rule hit before scope/suppression filtering (file-relative)."""
+    line: int
+    col: int
+    message: str
+
+
+@dataclass(frozen=True)
+class RuleMeta:
+    id: str                      # e.g. "TRC001" — [A-Z]{3}\d{3}
+    name: str                    # short kebab-case handle, e.g. "import-time-jnp"
+    summary: str                 # one-line invariant statement
+    #: path prefixes (posix, repo-relative) the rule lints by default;
+    #: None = every linted file. Overridable from pyproject.toml.
+    default_include: Optional[Tuple[str, ...]] = None
+    default_exclude: Tuple[str, ...] = ()
+
+
+class Rule:
+    """Base class; subclasses set `meta` and implement `check`."""
+
+    meta: RuleMeta
+
+    def check(self, ctx) -> Iterable[RawFinding]:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+
+_REGISTRY: Dict[str, Rule] = {}
+
+
+def register(cls):
+    """Class decorator: instantiate and index the rule by id."""
+    inst = cls()
+    rid = inst.meta.id
+    if rid in _REGISTRY:
+        raise ValueError(f"duplicate rule id {rid}")
+    _REGISTRY[rid] = inst
+    return cls
+
+
+def all_rules() -> Dict[str, Rule]:
+    """id -> rule instance, importing the built-in rule battery on first use."""
+    from . import rules  # noqa: F401  (registers on import)
+    return dict(sorted(_REGISTRY.items()))

@@ -1,0 +1,2 @@
+"""Built-in rule battery — importing this package registers every rule."""
+from . import atomic, collectives, determinism, hostsync, timing, trace  # noqa: F401

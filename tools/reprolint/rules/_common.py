@@ -1,0 +1,112 @@
+"""Shared AST helpers for the rule battery (jit/loop-body discovery)."""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+#: calls that do device work when evaluated (import-time trap, TRC001)
+_DEVICE_WORK_EXACT = ("jax.device_put", "jax.make_array_from_callback",
+                      "jax.make_array_from_single_device_arrays")
+#: jax.numpy attribute *references* (dtypes like jnp.float32) are fine;
+#: only calls into the namespace allocate/compute.
+_DEVICE_WORK_PREFIX = ("jax.numpy.",)
+
+
+def is_device_work_call(name: str) -> bool:
+    return name in _DEVICE_WORK_EXACT or \
+        any(name.startswith(p) for p in _DEVICE_WORK_PREFIX)
+
+#: cross-device collectives (COL001)
+COLLECTIVES = ("jax.lax.psum", "jax.lax.pmean", "jax.lax.pmax", "jax.lax.pmin",
+               "jax.lax.psum_scatter", "jax.lax.all_gather", "jax.lax.all_to_all",
+               "jax.lax.ppermute", "jax.lax.pshuffle")
+
+#: structured control flow: callable-argument index of the traced body
+LOOP_BODY_ARG = {"jax.lax.while_loop": (1, "body_fun"),
+                 "jax.lax.fori_loop": (2, "body_fun"),
+                 "jax.lax.scan": (0, "f")}
+
+_JIT_NAMES = ("jax.jit", "jax.pjit", "jax.experimental.pjit.pjit")
+
+
+def is_jit_name(name: Optional[str]) -> bool:
+    return name in _JIT_NAMES
+
+
+def _static_names_from_call(call: ast.Call, params: List[str]) -> Set[str]:
+    """static_argnames / static_argnums constants of a jit(...) call."""
+    static: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for sub in ast.walk(kw.value):
+                if isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+                    static.add(sub.value)
+        elif kw.arg == "static_argnums":
+            for sub in ast.walk(kw.value):
+                if isinstance(sub, ast.Constant) and isinstance(sub.value, int):
+                    if 0 <= sub.value < len(params):
+                        static.add(params[sub.value])
+    return static
+
+
+def param_names(fn) -> List[str]:
+    a = fn.args
+    names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names
+
+
+def jit_decorated(ctx) -> Iterator[Tuple[ast.FunctionDef, Set[str], ast.AST]]:
+    """(function, static param names, decorator node) for every function
+    decorated ``@jax.jit`` or ``@partial(jax.jit, ...)``."""
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for dec in node.decorator_list:
+            if is_jit_name(ctx.resolve(dec)):
+                yield node, set(), dec
+            elif isinstance(dec, ast.Call):
+                fname = ctx.resolve(dec.func)
+                if is_jit_name(fname):
+                    yield node, _static_names_from_call(dec, param_names(node)), dec
+                elif fname == "functools.partial" and dec.args and \
+                        is_jit_name(ctx.resolve(dec.args[0])):
+                    yield node, _static_names_from_call(dec, param_names(node)), dec
+
+
+def _functions_by_name(ctx) -> Dict[str, List[ast.FunctionDef]]:
+    out: Dict[str, List[ast.FunctionDef]] = {}
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out.setdefault(node.name, []).append(node)
+    return out
+
+
+def loop_bodies(ctx) -> Iterator[Tuple[ast.AST, ast.Call, str]]:
+    """(body function/lambda node, loop call, loop name) for every
+    ``lax.while_loop`` / ``fori_loop`` / ``scan`` call whose traced-body
+    argument is a lambda or a function defined in this module. Resolution
+    is lexical by design: bodies passed through arbitrary indirection are
+    out of reach, the audited-module excludes cover those."""
+    by_name = _functions_by_name(ctx)
+    for call in ctx.calls():
+        fname = ctx.resolve(call.func)
+        if fname not in LOOP_BODY_ARG:
+            continue
+        pos, kwname = LOOP_BODY_ARG[fname]
+        body = None
+        for kw in call.keywords:
+            if kw.arg == kwname:
+                body = kw.value
+        if body is None and len(call.args) > pos:
+            body = call.args[pos]
+        if body is None:
+            continue
+        if isinstance(body, ast.Lambda):
+            yield body, call, fname
+        elif isinstance(body, ast.Name):
+            for fn in by_name.get(body.id, []):
+                yield fn, call, fname

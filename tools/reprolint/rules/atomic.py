@@ -1,0 +1,132 @@
+"""Atomic persistence + file-handle hygiene (DESIGN.md §10.2/§11.2, PR 7/8).
+
+Every persistent-cache write in the repo goes tmp+rename (`os.replace`
+after `tempfile.mkstemp`, or publish-by-`os.rename` of a staged dir):
+concurrent processes must see old-or-new, never a torn file — the spill
+tier treats ANY unreadable entry as corruption and deletes it, so a torn
+write silently destroys a cache entry."""
+from __future__ import annotations
+
+import ast
+
+from ..registry import RawFinding, Rule, RuleMeta, register
+
+#: markers that the enclosing function stages writes atomically
+_ATOMIC_MARKERS = ("os.replace", "os.rename", "tempfile.mkstemp",
+                   "tempfile.NamedTemporaryFile", "tempfile.mkdtemp")
+
+#: persistent-write call shapes
+_NUMPY_WRITERS = ("numpy.save", "numpy.savez", "numpy.savez_compressed")
+
+
+def _write_mode(call: ast.Call) -> bool:
+    """Does this open()/os.fdopen() call use a writing mode?"""
+    mode = None
+    if len(call.args) >= 2 and isinstance(call.args[1], ast.Constant):
+        mode = call.args[1].value
+    for kw in call.keywords:
+        if kw.arg == "mode" and isinstance(kw.value, ast.Constant):
+            mode = kw.value.value
+    return isinstance(mode, str) and any(c in mode for c in "wax")
+
+
+@register
+class NonAtomicPersistentWrite(Rule):
+    """ATM001: writes in persistence-owning modules without tmp+rename.
+
+    Scope = the modules that own on-disk state (runtime cache/spill tier,
+    kernels autotune winners, ckpt, utils disk caches). A write-mode
+    `open`/`np.save*`/`write_text` whose enclosing function shows no
+    atomic staging marker (mkstemp/NamedTemporaryFile/os.replace/os.rename)
+    is flagged. Operator-requested export paths are legitimate
+    exceptions — suppress them with the reason.
+    """
+
+    meta = RuleMeta(
+        id="ATM001", name="non-atomic-persistent-write",
+        summary="persistent-state writes go through tmp+rename",
+        default_include=("src/repro/runtime", "src/repro/kernels",
+                         "src/repro/ckpt", "src/repro/utils.py"))
+
+    def check(self, ctx):
+        for call in ctx.calls():
+            name = ctx.resolve(call.func)
+            is_write = False
+            what = name
+            if name in ("open", "os.fdopen") and _write_mode(call):
+                is_write, what = True, f"{name}(mode='w')"
+            elif name in _NUMPY_WRITERS:
+                is_write = True
+            elif isinstance(call.func, ast.Attribute) and \
+                    call.func.attr in ("write_text", "write_bytes"):
+                is_write, what = True, f".{call.func.attr}()"
+            if not is_write:
+                continue
+            fn = ctx.enclosing_function(call)
+            scope = fn if fn is not None else ctx.tree
+            if not self._has_atomic_marker(ctx, scope):
+                yield RawFinding(
+                    call.lineno, call.col_offset,
+                    f"`{what}` without tmp+rename in a persistence module — "
+                    "stage via tempfile.mkstemp + os.replace (see "
+                    "utils.disk_cache_update); suppress with a reason for "
+                    "non-cache export paths")
+
+    def _has_atomic_marker(self, ctx, scope) -> bool:
+        for sub in ast.walk(scope):
+            if isinstance(sub, (ast.Attribute, ast.Name)):
+                if ctx.resolve(sub) in _ATOMIC_MARKERS:
+                    return True
+        return False
+
+
+@register
+class OpenWithoutContext(Rule):
+    """RES001: `open()` outside a `with` (or explicit close).
+
+    `json.load(open(path))` leaks the handle until GC — on CPython it
+    usually works, until a spill-tier test runs on Windows-semantics or a
+    long-lived server accumulates fds. Accepted shapes: `with open(...)`,
+    `contextlib.closing(open(...))`, or assignment to a name that is
+    `.close()`d in the same function.
+    """
+
+    meta = RuleMeta(
+        id="RES001", name="open-without-context",
+        summary="file handles are opened under a context manager")
+
+    def check(self, ctx):
+        for call in ctx.calls():
+            if ctx.resolve(call.func) not in ("open", "os.fdopen"):
+                continue
+            if self._managed(ctx, call):
+                continue
+            yield RawFinding(
+                call.lineno, call.col_offset,
+                "`open()` without a context manager leaks the handle — "
+                "use `with open(...) as f:`")
+
+    def _managed(self, ctx, call) -> bool:
+        parent = ctx.parent(call)
+        # with open(...) as f:   (withitem's context_expr)
+        if isinstance(parent, ast.withitem) and parent.context_expr is call:
+            return True
+        # contextlib.closing(open(...)) / io wrapper directly under `with`
+        if isinstance(parent, ast.Call):
+            gp = ctx.parent(parent)
+            if isinstance(gp, ast.withitem) and gp.context_expr is parent:
+                return True
+        # f = open(...) ... f.close()  in the same function
+        if isinstance(parent, (ast.Assign, ast.AnnAssign)):
+            targets = parent.targets if isinstance(parent, ast.Assign) \
+                else [parent.target]
+            names = {t.id for t in targets if isinstance(t, ast.Name)}
+            fn = ctx.enclosing_function(call) or ctx.tree
+            for sub in ast.walk(fn):
+                if isinstance(sub, ast.Call) and \
+                        isinstance(sub.func, ast.Attribute) and \
+                        sub.func.attr == "close" and \
+                        isinstance(sub.func.value, ast.Name) and \
+                        sub.func.value.id in names:
+                    return True
+        return False

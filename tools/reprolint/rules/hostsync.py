@@ -1,0 +1,91 @@
+"""Host-sync discipline in the serving runtime (DESIGN.md §8, PR 4).
+
+The scheduler hot path stages batches with NUMPY ONLY and blocks exactly
+once per bucket chunk, at harvest. Any other device->host sync serializes
+the async dispatch pipeline — per-request `jnp` staging was the measured
+bottleneck PR 4 removed."""
+from __future__ import annotations
+
+import ast
+
+from ..registry import RawFinding, Rule, RuleMeta, register
+
+_RUNTIME = ("src/repro/runtime",)
+
+
+@register
+class HostSyncInRuntime(Rule):
+    """SYN001: device->host syncs in the runtime outside harvest.
+
+    Flags `.item()`, `jax.device_get`, and `float()`/`int()`/`bool()`/
+    `np.asarray()` applied *directly* to a `jnp.*` call result — each one
+    blocks on the device from scheduler code that must stay async.
+    (Device-ness of arbitrary names is undecidable statically; syncs on
+    harvested buffers after the sanctioned block are fine and unflagged.)
+    """
+
+    meta = RuleMeta(
+        id="SYN001", name="host-sync-in-runtime",
+        summary="no .item()/device_get/scalar-coercion syncs in runtime/",
+        default_include=_RUNTIME)
+
+    _COERCERS = ("float", "int", "bool", "numpy.asarray", "numpy.array")
+
+    def check(self, ctx):
+        for call in ctx.calls():
+            name = ctx.resolve(call.func)
+            if name == "jax.device_get":
+                yield RawFinding(call.lineno, call.col_offset,
+                                 "`jax.device_get` syncs the device in "
+                                 "runtime/ — harvest via the sanctioned "
+                                 "block_until_ready site instead")
+            elif isinstance(call.func, ast.Attribute) and \
+                    call.func.attr == "item" and not call.args:
+                yield RawFinding(call.lineno, call.col_offset,
+                                 "`.item()` forces a device sync in "
+                                 "runtime/ — stage with numpy, harvest once "
+                                 "per bucket")
+            elif name in self._COERCERS and call.args and \
+                    self._is_jnp_call(ctx, call.args[0]):
+                yield RawFinding(call.lineno, call.col_offset,
+                                 f"`{name}()` on a jnp result syncs the "
+                                 "device in runtime/ (numpy-only host "
+                                 "staging, DESIGN.md §8)")
+
+    def _is_jnp_call(self, ctx, expr) -> bool:
+        for sub in ast.walk(expr):
+            if isinstance(sub, ast.Call):
+                n = ctx.resolve(sub.func)
+                if n and n.startswith("jax.numpy."):
+                    return True
+        return False
+
+
+@register
+class UnsanctionedBlock(Rule):
+    """SYN002: `block_until_ready` outside the sanctioned harvest sites.
+
+    The runtime blocks exactly once per bucket chunk — at harvest
+    (`scheduler._harvest`, suppressed there with justification). Every
+    additional block point hides queue time inside service time and
+    un-overlaps dispatch.
+    """
+
+    meta = RuleMeta(
+        id="SYN002", name="unsanctioned-block",
+        summary="block_until_ready only at the audited harvest site",
+        default_include=_RUNTIME)
+
+    def check(self, ctx):
+        for call in ctx.calls():
+            name = ctx.resolve(call.func)
+            is_block = (name == "jax.block_until_ready"
+                        or (isinstance(call.func, ast.Attribute)
+                            and call.func.attr == "block_until_ready"))
+            if is_block:
+                yield RawFinding(
+                    call.lineno, call.col_offset,
+                    "`block_until_ready` outside the sanctioned harvest "
+                    "site — the runtime blocks once per bucket chunk "
+                    "(suppress with justification if this IS a harvest "
+                    "site)")

@@ -1,0 +1,35 @@
+"""Timing discipline (DESIGN.md §12.1, PR 9) — formerly tools/check_timing.py.
+
+The serving runtime takes every timestamp through `repro.obs.clock`
+(monotonic / monotonic_ns / walltime aliases): mixed clock sources are how
+latency accounting silently breaks — a monotonic launch instant subtracted
+from a walltime completion instant is garbage, and the bug only shows up
+as impossible percentiles much later. The AST port no longer false-flags
+clock mentions in comments/docstrings (the regex version did, by design;
+the suppression mechanism replaces that bluntness)."""
+from __future__ import annotations
+
+from ..registry import RawFinding, Rule, RuleMeta, register
+
+_BARE_CLOCKS = ("time.time", "time.time_ns", "time.perf_counter",
+                "time.perf_counter_ns", "time.monotonic", "time.monotonic_ns")
+
+
+@register
+class BareClockInRuntime(Rule):
+    """TIM001: bare `time.*` clock reads inside src/repro/runtime/."""
+
+    meta = RuleMeta(
+        id="TIM001", name="bare-clock-in-runtime",
+        summary="runtime/ reads clocks only via repro.obs.clock",
+        default_include=("src/repro/runtime",))
+
+    def check(self, ctx):
+        for call in ctx.calls():
+            name = ctx.resolve(call.func)
+            if name in _BARE_CLOCKS:
+                yield RawFinding(
+                    call.lineno, call.col_offset,
+                    f"bare `{name}()` in runtime/ — use the repro.obs.clock "
+                    "aliases (monotonic/monotonic_ns/walltime) so the clock "
+                    "choice stays auditable (DESIGN.md §12.1)")
